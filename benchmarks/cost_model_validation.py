@@ -1,0 +1,79 @@
+"""Paper Table 2: per-operation cost model vs measurement.
+
+Two parts:
+  (a) the paper's own setting (LLaMA-2-70B, 8×A100, B_dense=2048) —
+      analytic rows must reproduce the published GFLOP/GB/ms numbers;
+  (b) CPU micro-measurement of a scaled-down op set — wall-times must
+      *rank* the ops the same way the model's dominant-resource times do
+      (the validation the paper does with real GPU profiles).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro.configs import get_config
+from repro.core import costmodel as cm
+
+
+def paper_table() -> list[dict]:
+    cfg = get_config("llama2-70b")
+    rows = cm.table2(cfg, cm.Workload(512, 1024), cm.A100_80G, 8, bdense=2048)
+    out = []
+    for r in rows:
+        out.append({"bench": "table2", "op": r["op"],
+                    "gflops": round(r["gflops"], 1),
+                    "mem_gb": round(r["mem_gb"], 1),
+                    "net_gb": round(r["net_gb"], 1),
+                    "t_max_ms": round(max(r["t_compute_ms"], r["t_mem_ms"],
+                                          r["t_net_ms"]), 2),
+                    "bound": r["bound"]})
+    return out
+
+
+def cpu_proxy() -> list[dict]:
+    """Tiny GEMM vs decode-GEMV on CPU: the measured time ratio must agree
+    in *direction* with the model (GEMM compute-bound, GEMV memory-bound)."""
+    d, ff, b, s, kv, hd = 512, 1408, 8, 2048, 4, 64
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (256, d), jnp.float32)
+    w = jax.random.normal(key, (d, ff), jnp.float32)
+    gemm = jax.jit(lambda a, b_: a @ b_)
+    t_gemm = time_fn(gemm, x, w)
+
+    q = jax.random.normal(key, (b, 8, hd), jnp.float32)
+    kc = jax.random.normal(key, (b, s, kv, hd), jnp.float32)
+    vc = jax.random.normal(key, (b, s, kv, hd), jnp.float32)
+    clen = jnp.full((b,), s, jnp.int32)
+    from repro.kernels.ref import decode_attention_ref
+    dec = jax.jit(lambda *a: decode_attention_ref(*a))
+    t_dec = time_fn(dec, q, kc, vc, clen)
+
+    gemm_flops = 2 * 256 * d * ff
+    dec_bytes = 2 * b * s * kv * hd * 4
+    return [{
+        "bench": "table2_cpu_proxy",
+        "gemm_us": round(t_gemm * 1e6, 1),
+        "decode_us": round(t_dec * 1e6, 1),
+        "gemm_gflops_per_s": round(gemm_flops / t_gemm / 1e9, 2),
+        "decode_gb_per_s": round(dec_bytes / t_dec / 1e9, 2),
+    }]
+
+
+def run() -> list[dict]:
+    return paper_table() + cpu_proxy()
+
+
+def main() -> None:
+    for r in paper_table():
+        print(f"table2/{r['op']},{r['t_max_ms']*1e3:.1f},"
+              f"{r['gflops']}GF {r['mem_gb']}GB {r['net_gb']}GBnet {r['bound']}")
+    for r in cpu_proxy():
+        print(f"table2/cpu_gemm,{r['gemm_us']},{r['gemm_gflops_per_s']} GF/s")
+        print(f"table2/cpu_decode,{r['decode_us']},{r['decode_gb_per_s']} GB/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,160 @@
+"""Roofline analysis (deliverable g): three terms per (arch × shape × mesh)
+from the compiled dry-run artifacts in results/dryrun/.
+
+  compute term    = HLO_FLOPs_per_dev / peak_FLOP/s          (197 TF bf16)
+  memory term     = HLO_bytes_per_dev / HBM_bw               (819 GB/s)
+  collective term = collective_bytes_per_dev / link_bw       (50 GB/s)
+
+(cost_analysis reports per-device quantities of the SPMD-partitioned module,
+so dividing by per-chip peaks == the global formula divided by chips.)
+
+Plus: MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (inference) per
+token over the cell's tokens, and the usefulness ratio
+MODEL_FLOPS / (HLO_FLOPs·n_dev) — catches remat/dispatch/padding waste.
+
+Caveat (documented): the CPU backend upcasts bf16 GEMM/scan operands to f32
+(wrapped converts in the HLO), so the raw memory term is an *upper bound*;
+native-bf16 TPU execution reads ≈half for those streams.  We report both the
+raw term and a corrected term (raw − 2·upcast_bytes, floored at the analytic
+parameter+cache traffic).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+from repro.core import costmodel as cm
+from repro.models.model import active_params, num_params
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_act = active_params(cfg)
+    if shape.step == "train":
+        per_token = 6 * n_act
+        tokens = shape.global_batch * shape.seq_len
+    elif shape.step == "prefill":
+        per_token = 2 * n_act
+        tokens = shape.global_batch * shape.seq_len
+    else:  # decode: one token per sequence
+        per_token = 2 * n_act
+        tokens = shape.global_batch
+    return per_token * tokens
+
+
+def analytic_memory_floor(arch: str, shape_name: str, n_dev: int) -> float:
+    """Minimum per-device HBM traffic: weights once + KV/state + activations
+    in/out (bf16)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ms = cm.model_stats(cfg)
+    w_bytes = ms.p_model * 2 / n_dev                     # weights, fully sharded
+    if shape.step == "train":
+        w_bytes *= 3                                     # fwd + bwd(dW) + opt
+        act = shape.global_batch * shape.seq_len * cfg.d_model * 2 \
+            * cfg.n_layers / n_dev * 2
+        kv = 0.0
+    elif shape.step == "prefill":
+        act = shape.global_batch * shape.seq_len * cfg.d_model * 2 \
+            * cfg.n_layers / n_dev * 2
+        kv = shape.global_batch * shape.seq_len * ms.kv_per_token * 2 / n_dev
+    else:
+        act = shape.global_batch * cfg.d_model * 2 * cfg.n_layers / n_dev * 2
+        kv = shape.global_batch * shape.seq_len * ms.kv_per_token * 2 / n_dev
+    return w_bytes + act + kv
+
+
+def analyze(path: str) -> dict:
+    d = json.load(open(path))
+    if not d.get("ok"):
+        return {"arch": d["arch"], "shape": d["shape"],
+                "mesh": d.get("mesh"), "ok": False, "error": d.get("error")}
+    n_dev = d["n_devices"]
+    flops = d["flops_per_device"]
+    raw_bytes = d["bytes_per_device"]
+    upcast = d["collectives"].get("upcast_bytes", 0)
+    floor = analytic_memory_floor(d["arch"], d["shape"], n_dev)
+    corr_bytes = max(raw_bytes - 2 * upcast, floor)
+    coll = d["collectives"]["total_bytes"]
+
+    t_c = flops / PEAK_FLOPS
+    t_m_raw = raw_bytes / HBM_BW
+    t_m = corr_bytes / HBM_BW
+    t_n = coll / LINK_BW
+    terms = {"compute": t_c, "memory": t_m, "network": t_n}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(d["arch"], d["shape"])
+    useful = mf / max(flops * n_dev, 1.0)
+    bound_time = max(terms.values())
+    return {
+        "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+        "variant": d.get("variant", "baseline"), "remat": d.get("remat"),
+        "ok": True, "n_devices": n_dev,
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_memory_raw_s": t_m_raw,
+        "t_network_s": t_n,
+        "dominant": dom,
+        "model_flops": mf, "hlo_flops_global": flops * n_dev,
+        "useful_ratio": useful,
+        "roofline_fraction": t_c / bound_time if bound_time else 0.0,
+        "temp_gb": d["memory"]["temp_gb"] if d.get("memory") else None,
+        "arg_gb": d["memory"]["argument_gb"] if d.get("memory") else None,
+    }
+
+
+ADVICE = {
+    ("memory",): "dominant=memory: cut HBM traffic (kernel fusion — Pallas "
+                 "flash/scan keep working set in VMEM; drop f32 upcasts).",
+    ("network",): "dominant=network: reshard to cut collective bytes "
+                  "(dispatch layout, collective-matmul overlap, DP over TP).",
+    ("compute",): "dominant=compute: at roofline when useful_ratio→1; else "
+                  "remove wasted FLOPs (remat policy, dispatch einsums, "
+                  "head padding).",
+}
+
+
+def advice(row: dict) -> str:
+    base = ADVICE[(row["dominant"],)]
+    if row["useful_ratio"] < 0.5 and row["dominant"] == "compute":
+        base += f" (useful_ratio={row['useful_ratio']:.2f} — mostly waste)"
+    return base
+
+
+def run(pattern: str = "results/dryrun/*__baseline*.json") -> list[dict]:
+    rows = [analyze(p) for p in sorted(glob.glob(pattern))]
+    return [r for r in rows if r.get("ok")]
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | Tc (s) | Tm (s) | Tm-raw | Tn (s) | "
+           "dominant | useful | frac |")
+    sep = "|" + "---|" * 10
+    out = [hdr, sep]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.3g} | {r['t_memory_s']:.3g} "
+            f"| {r['t_memory_raw_s']:.3g} | {r['t_network_s']:.3g} "
+            f"| **{r['dominant']}** | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.2f} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    rows = run()
+    for r in rows:
+        print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},"
+              f"{max(r['t_compute_s'], r['t_memory_s'], r['t_network_s'])*1e6:.0f},"
+              f"Tc={r['t_compute_s']:.3g}s Tm={r['t_memory_s']:.3g}s "
+              f"Tn={r['t_network_s']:.3g}s dom={r['dominant']} "
+              f"useful={r['useful_ratio']:.2f} frac={r['roofline_fraction']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Run:
+    PYTHONPATH=src python -m benchmarks.run [--only fig10,roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("fig2_workload_class", "benchmarks.workload_class"),
+    ("table2_cost_model", "benchmarks.cost_model_validation"),
+    ("fig10_offline_throughput", "benchmarks.offline_throughput"),
+    ("fig11_12_online_latency", "benchmarks.online_latency"),
+    ("fig13_ablation", "benchmarks.ablation"),
+    ("fig14_resource_usage", "benchmarks.resource_usage"),
+    ("fig15_ported_models", "benchmarks.ported_models"),
+    ("roofline", "benchmarks.roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substring filters")
+    args = ap.parse_args()
+    filters = args.only.split(",") if args.only else None
+
+    failures = 0
+    for name, modname in MODULES:
+        if filters and not any(f in name for f in filters):
+            continue
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(modname, fromlist=["main"])
+            mod.main()
+        except Exception:
+            failures += 1
+            print(f"# {name} FAILED:\n{traceback.format_exc()[-1500:]}",
+                  flush=True)
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

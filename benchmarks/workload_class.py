@@ -1,0 +1,38 @@
+"""Paper Fig. 2: workload classification via T_R (Eq. 8)."""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core import costmodel as cm
+
+CASES = [
+    ("llama2-70b", cm.A100_80G, 8),
+    ("qwen3-8b", cm.A100_80G, 1),
+    ("qwen3-8b", cm.TPU_V5E, 16),
+    ("jamba-1.5-large-398b", cm.TPU_V5E, 256),
+    ("arctic-480b", cm.TPU_V5E, 256),
+    ("deepseek-v2-236b", cm.TPU_V5E, 256),
+]
+
+
+def run() -> list[dict]:
+    rows = []
+    for arch, hw, n in CASES:
+        ms = cm.model_stats(get_config(arch))
+        for wname in ("splitwise", "lmsys", "sharegpt"):
+            w = cm.WORKLOADS[wname]
+            rows.append({
+                "bench": "workload_class",
+                "case": f"{arch}@{n}x{hw.name}/{wname}",
+                "t_r": round(cm.t_r(hw, ms, w, n), 4),
+                "class": cm.classify(hw, ms, w, n),
+            })
+    return rows
+
+
+def main() -> None:
+    for r in run():
+        print(f"workload_class/{r['case']},0.0,T_R={r['t_r']} {r['class']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""NanoFlow §5.5: run the automatic parameter search for any architecture
+and print the resulting overlapped schedule + resource timeline.
+
+    PYTHONPATH=src python examples/autosearch_plan.py --arch deepseek-v2-236b
+"""
+import argparse
+
+from benchmarks.resource_usage import occupancy, render
+from repro.configs import get_config
+from repro.core import costmodel as cm
+from repro.core.autosearch import (autosearch, sequential_schedule,
+                                   throughput_estimate)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama2-70b")
+    ap.add_argument("--devices", type=int, default=256)
+    ap.add_argument("--hw", default="TPUv5e", choices=sorted(cm.HARDWARE))
+    ap.add_argument("--prefill", type=float, default=1024)
+    ap.add_argument("--decode", type=float, default=512)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    hw = cm.HARDWARE[args.hw]
+    w = cm.Workload(args.prefill, args.decode)
+    ms = cm.model_stats(cfg)
+
+    print(f"=== {args.arch} @ {args.devices}x{hw.name}, p={args.prefill} "
+          f"d={args.decode} ===")
+    print(f"classification: {cm.classify(hw, ms, w, args.devices)} "
+          f"(T_R={cm.t_r(hw, ms, w, args.devices):.3f})")
+    opt = cm.optimal_throughput(hw, ms, args.devices)
+    print(f"optimal (Eq.9): {opt:.0f} tok/s total, "
+          f"{opt/args.devices:.0f} tok/s/chip")
+
+    nano = autosearch(cfg, w, hw, args.devices)
+    seq = sequential_schedule(cfg, w, hw, args.devices)
+    tp = throughput_estimate(cfg, nano, w, hw, args.devices)
+    print(f"\nautosearch: nano_kqv={nano.nano_kqv} nano_dense={nano.nano_dense}")
+    print(f"iter time: {nano.iter_time*1e3:.3f} ms/layer "
+          f"(sequential {seq.iter_time*1e3:.3f} ms = "
+          f"{seq.iter_time/nano.iter_time:.2f}x slower)")
+    print(f"modeled throughput: {tp:.0f} tok/s/chip "
+          f"({100*tp*args.devices/opt:.1f}% of optimal)")
+    print(f"critical path: {' -> '.join(nano.critical_path)}")
+    print("\nunit assignment (execution-unit scheduling):")
+    for name, u in sorted(nano.unit_assignment.items()):
+        node = nano.pipeline.nodes[name]
+        print(f"  {name:10s} {node.kind:8s} units={u:.2f} "
+              f"[{node.start*1e3:7.3f}, {node.end*1e3:7.3f}] ms")
+    print("\nresource occupancy (one layer iteration):")
+    print(render(occupancy(nano)))
+
+
+if __name__ == "__main__":
+    main()

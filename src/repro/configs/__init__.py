@@ -1,0 +1,7 @@
+from repro.configs.base import (  # noqa: F401
+    ATTN, MAMBA, MLSTM, SLSTM,
+    FFN_DENSE, FFN_MOE, FFN_MOE_DENSE, FFN_NONE,
+    LayerSpec, MoEConfig, MLAConfig, MambaConfig, XLSTMConfig,
+    ModelConfig, ShapeConfig, SHAPES, applicable_shapes,
+    register, get_config, list_configs, scale_down,
+)

@@ -1,0 +1,265 @@
+"""Model/shape configuration system.
+
+Every architecture in the assigned pool is expressed as a ``ModelConfig``; the
+unified model in ``repro.models.model`` consumes only this dataclass, so adding
+an architecture is a single config file.
+
+Block types
+-----------
+The per-layer structure is a repeating ``block_pattern`` of ``LayerSpec``s
+(attention / mamba / mlstm / slstm) each paired with an FFN kind
+(dense / moe / moe+dense-residual / none).  ``layer_groups()`` expands the
+pattern to ``n_layers`` and groups identical patterns so the model can
+``jax.lax.scan`` over stacked parameter pytrees (1 CPU core in this container
+=> HLO size matters; scan keeps compile time flat in depth).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+# ---------------------------------------------------------------------------
+# Layer / FFN kinds
+# ---------------------------------------------------------------------------
+ATTN = "attn"          # softmax attention (GQA or MLA)
+MAMBA = "mamba"        # Mamba-1 selective SSM
+MLSTM = "mlstm"        # xLSTM matrix-LSTM
+SLSTM = "slstm"        # xLSTM scalar-LSTM
+
+FFN_DENSE = "dense"
+FFN_MOE = "moe"
+FFN_MOE_DENSE = "moe+dense"   # Arctic-style parallel dense residual + MoE
+FFN_NONE = "none"
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One decoder layer: a sequence-mixing op plus an FFN kind."""
+    mixer: str = ATTN
+    ffn: str = FFN_DENSE
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0
+    top_k: int = 2
+    expert_d_ff: int = 0
+    num_shared_experts: int = 0      # DeepSeek-style always-on experts
+    shared_d_ff: int = 0
+    capacity_factor: float = 1.25
+    # group size (tokens per dispatch group) for the GShard einsum dispatch;
+    # smaller groups shrink the (G, S, E, C) dispatch tensor working set.
+    dispatch_group: int = 512
+    router_jitter: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 multi-head latent attention."""
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 1536
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0          # 0 => ceil(d_model/16)
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    proj_factor: float = 2.0   # mLSTM up-projection factor
+    conv_kernel: int = 4
+    slstm_conv_kernel: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 => d_model // n_heads
+    block_pattern: tuple[LayerSpec, ...] = (LayerSpec(),)
+    # explicit specs for the first k layers (e.g. DeepSeek-V2 layer-0 dense
+    # FFN); the repeating block_pattern fills the remaining layers.
+    first_layers: tuple[LayerSpec, ...] = ()
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    mamba: Optional[MambaConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    qk_norm: bool = False
+    ffn_gated: bool = True           # SwiGLU (3 mats) vs plain MLP (2 mats)
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # modality frontends (stub): number of non-text embedding positions the
+    # input_specs() provide, and (audio) codebook count.
+    frontend: str = "none"           # none | vision | audio
+    num_patch_tokens: int = 0        # vision stub
+    num_codebooks: int = 1           # audio stub (MusicGen)
+    # long-context: archs with any full-attention layer cannot run long_500k
+    dtype: str = "bfloat16"
+    citation: str = ""
+
+    # ---- derived -----------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def gqa_group(self) -> int:
+        return self.n_heads // max(self.n_kv_heads, 1)
+
+    def layer_specs(self) -> list[LayerSpec]:
+        """Expand first_layers + block_pattern to n_layers LayerSpecs."""
+        rest = self.n_layers - len(self.first_layers)
+        assert rest >= 0, "first_layers longer than n_layers"
+        pat = self.block_pattern
+        reps = math.ceil(rest / len(pat))
+        return list(self.first_layers) + (list(pat) * reps)[:rest]
+
+    def layer_groups(self) -> list[tuple[tuple[LayerSpec, ...], int]]:
+        """Group layers into (pattern, repeat_count) for scan-over-groups.
+
+        The model ``jax.lax.scan``s ``repeat_count`` times over a body of
+        ``len(pattern)`` sub-layers with stacked params — keeps HLO size flat
+        in depth.  first_layers become (spec,)×1 leading groups.
+        """
+        groups: list[tuple[tuple[LayerSpec, ...], int]] = []
+        for spec in self.first_layers:
+            groups.append(((spec,), 1))
+        rest = self.n_layers - len(self.first_layers)
+        pat = self.block_pattern
+        full, rem = divmod(rest, len(pat))
+        if full:
+            groups.append((tuple(pat), full))
+        if rem:
+            groups.append((tuple(pat[:rem]), 1))
+        return groups
+
+    @property
+    def has_full_attention(self) -> bool:
+        return any(s.mixer == ATTN for s in self.block_pattern)
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic state growth?  Hybrids qualify (attention KV is
+        sequence-shardable; Mamba/xLSTM state is O(1))."""
+        return self.family in ("ssm", "hybrid")
+
+    # NOTE: parameter counts are computed from the actual param tree (single
+    # source of truth) — see ``repro.models.model.num_params`` /
+    # ``active_params``, which sum ``param_shapes(cfg)`` leaves (tagging
+    # expert weights by path for the MoE active count).
+
+
+# ---------------------------------------------------------------------------
+# Shapes (assigned): seq_len x global_batch, and which step they lower
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    step: str                 # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable_shapes(cfg: ModelConfig) -> list[ShapeConfig]:
+    out = []
+    for s in SHAPES.values():
+        if s.name == "long_500k" and not cfg.supports_long_context:
+            continue  # skip for pure full-attention archs (see DESIGN.md §4)
+        out.append(s)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+_REGISTRY: dict[str, "ModelConfig"] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    if not _REGISTRY:
+        _load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_configs() -> list[str]:
+    if not _REGISTRY:
+        _load_all()
+    return sorted(_REGISTRY)
+
+
+def _load_all() -> None:
+    # import each config module for its register() side effect
+    from repro.configs import (  # noqa: F401
+        jamba_1_5_large_398b,
+        xlstm_1_3b,
+        qwen3_4b,
+        minitron_4b,
+        qwen3_8b,
+        starcoder2_7b,
+        llava_next_34b,
+        musicgen_medium,
+        arctic_480b,
+        deepseek_v2_236b,
+        llama2_70b,
+        tiny,
+    )
+
+
+def scale_down(cfg: ModelConfig, *, n_layers: int = 0, d_model: int = 128,
+               n_heads: int = 4, vocab: int = 512) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests.
+
+    Keeps the block pattern / MoE / MLA / SSM structure, shrinks all widths.
+    """
+    pat_len = min(len(cfg.block_pattern), 8)
+    layers = n_layers or (len(cfg.first_layers) + pat_len)
+    kv = max(1, min(cfg.n_kv_heads, n_heads))
+    hd = max(8, d_model // n_heads)
+    moe = None
+    if cfg.moe is not None:
+        moe = dataclasses.replace(
+            cfg.moe, num_experts=min(cfg.moe.num_experts, 4),
+            top_k=min(cfg.moe.top_k, 2), expert_d_ff=d_model * 2,
+            shared_d_ff=d_model * 2 if cfg.moe.num_shared_experts else 0,
+            dispatch_group=64)
+    mla = None
+    if cfg.mla is not None:
+        mla = MLAConfig(kv_lora_rank=32, q_lora_rank=48, qk_nope_dim=hd,
+                        qk_rope_dim=8, v_head_dim=hd)
+    return dataclasses.replace(
+        cfg, name=cfg.name + "-smoke", n_layers=layers, d_model=d_model,
+        n_heads=n_heads, n_kv_heads=kv, head_dim=hd,
+        d_ff=0 if cfg.d_ff == 0 else d_model * 3,
+        vocab_size=vocab, moe=moe, mla=mla,
+        num_patch_tokens=min(cfg.num_patch_tokens, 8) if cfg.num_patch_tokens else 0,
+    )

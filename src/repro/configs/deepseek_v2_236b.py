@@ -1,0 +1,32 @@
+"""DeepSeek-V2 (236B) — MLA kv_lora=512, 2 shared + 160 routed top-6
+[arXiv:2405.04434; hf].
+
+60L d_model=5120 128H (MLA; assignment writes "GQA kv=128" = per-head KV
+up-projected from the 512-d latent) d_ff=1536 (routed expert dim)
+vocab=102400.  First layer uses a dense FFN (d_ff 12288 per the paper); the
+remaining 59 layers are MoE with 2 shared experts (1536 each → shared_d_ff
+3072 fused) + 160 routed, top-6.
+"""
+from repro.configs.base import (
+    ATTN, FFN_DENSE, FFN_MOE, LayerSpec, MLAConfig, MoEConfig, ModelConfig,
+    register,
+)
+
+CONFIG = register(ModelConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    n_layers=60,
+    d_model=5120,
+    n_heads=128,
+    n_kv_heads=128,
+    d_ff=12288,                     # dense layer-0 FFN dim
+    vocab_size=102400,
+    first_layers=(LayerSpec(mixer=ATTN, ffn=FFN_DENSE),),  # layer 0 dense
+    block_pattern=(LayerSpec(mixer=ATTN, ffn=FFN_MOE),),   # layers 1..59 MoE
+
+    moe=MoEConfig(num_experts=160, top_k=6, expert_d_ff=1536,
+                  num_shared_experts=2, shared_d_ff=3072),
+    mla=MLAConfig(kv_lora_rank=512, q_lora_rank=1536,
+                  qk_nope_dim=128, qk_rope_dim=64, v_head_dim=128),
+    citation="arXiv:2405.04434",
+))

@@ -1,0 +1,30 @@
+"""Tiny configs for CPU examples / end-to-end drivers (~100M-class and below)."""
+from repro.configs.base import LayerSpec, ModelConfig, register
+
+# ~100M dense model for examples/train_small.py
+CONFIG_100M = register(ModelConfig(
+    name="tiny-100m",
+    family="dense",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=4,
+    d_ff=2048,
+    vocab_size=32000,
+    block_pattern=(LayerSpec(),),
+    citation="n/a (example)",
+))
+
+# even smaller model for fast engine/benchmark runs on 1 CPU core
+CONFIG_TOY = register(ModelConfig(
+    name="tiny-toy",
+    family="dense",
+    n_layers=4,
+    d_model=256,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=512,
+    vocab_size=512,
+    block_pattern=(LayerSpec(),),
+    citation="n/a (example)",
+))

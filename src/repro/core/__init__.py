@@ -1,0 +1,1 @@
+from repro.core import costmodel, nanobatch, pipeline  # noqa: F401

@@ -1,0 +1,95 @@
+"""NanoFlow §4.3: nano-batching — execution-level batch splitting.
+
+On TPU the overlap itself is realized by (a) the XLA async-collective
+scheduler once nano-batching has broken the all-or-nothing dependency chain,
+(b) the decomposed collective matmul (distributed/collective_matmul.py) and
+(c) the fused Pallas kernel (kernels/fused_overlap.py).  This module provides
+the *semantics-preserving splitting machinery* those consumers share:
+
+  * ``split``/``merge``        — slice a dense token batch into nano-batches
+  * ``NanoBatchPlan``          — sizes chosen by autosearch (§5.5)
+  * ``interleaved_apply``      — run a two-stage op pair over nano-batches in
+                                 the paper's Figure-6 interleave order so the
+                                 network stage of chunk i is dependency-free
+                                 of the compute stage of chunk i+1
+
+Correctness invariant (tested): for any plan, outputs equal the unsplit op.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class NanoBatchPlan:
+    """Nano-batch sizes along the token axis.  sum(sizes) == batch tokens."""
+    sizes: tuple[int, ...]
+
+    @staticmethod
+    def even(total: int, n: int) -> "NanoBatchPlan":
+        base, rem = divmod(total, n)
+        sizes = tuple(base + (1 if i < rem else 0) for i in range(n))
+        return NanoBatchPlan(sizes=tuple(s for s in sizes if s > 0))
+
+    @property
+    def offsets(self) -> tuple[int, ...]:
+        out, acc = [], 0
+        for s in self.sizes:
+            out.append(acc)
+            acc += s
+        return tuple(out)
+
+
+def split(x: jax.Array, plan: NanoBatchPlan, axis: int = 0) -> list[jax.Array]:
+    assert x.shape[axis] == sum(plan.sizes), (x.shape, plan)
+    outs, start = [], 0
+    for s in plan.sizes:
+        idx = [slice(None)] * x.ndim
+        idx[axis] = slice(start, start + s)
+        outs.append(x[tuple(idx)])
+        start += s
+    return outs
+
+
+def merge(parts: Sequence[jax.Array], axis: int = 0) -> jax.Array:
+    return jnp.concatenate(parts, axis=axis)
+
+
+def interleaved_apply(stage_compute: Callable[[jax.Array], jax.Array],
+                      stage_network: Callable[[jax.Array], jax.Array],
+                      x: jax.Array, plan: NanoBatchPlan,
+                      axis: int = 0) -> jax.Array:
+    """Figure-6 interleave: Com(1) ; [Net(1) ∥ Com(2)] ; Net(2) ; ...
+
+    In JAX the parallelism is expressed as *dependency freedom*: Net(i) only
+    depends on Com(i), so the TPU latency-hiding scheduler overlaps Net(i)
+    with Com(i+1).  Semantics are unchanged (tested vs the unsplit path).
+    """
+    chunks = split(x, plan, axis)
+    computed = [stage_compute(c) for c in chunks]
+    netted = [stage_network(c) for c in computed]
+    return merge(netted, axis)
+
+
+def nano_batch_sizes_for(total_tokens: int, nano: int,
+                         multiple_of: int = 8) -> NanoBatchPlan:
+    """Sizes rounded to hardware-friendly multiples (paper's discrete
+    batching insight applied at nano-batch granularity)."""
+    if nano <= 1 or total_tokens <= multiple_of:
+        return NanoBatchPlan((total_tokens,))
+    base = max(multiple_of, (total_tokens // nano) // multiple_of * multiple_of)
+    sizes = []
+    left = total_tokens
+    for _ in range(nano - 1):
+        take = min(base, left)
+        if take <= 0:
+            break
+        sizes.append(take)
+        left -= take
+    if left > 0:
+        sizes.append(left)
+    return NanoBatchPlan(tuple(sizes))

@@ -1,0 +1,142 @@
+"""Sharded checkpointing with atomic commit, retention, and elastic restore.
+
+Layout (one directory per step):
+    <dir>/step_000420/
+        METADATA.json        — tree structure, shapes, dtypes, step
+        <leaf-path>.npy      — one file per pytree leaf
+
+Writes go to ``step_XXXX.tmp`` and are renamed on completion, so a crash
+mid-save never corrupts the latest checkpoint (restart-safe).  ``restore``
+accepts a target mesh/shardings different from the one that saved — the
+elastic-rescale path (DESIGN.md §5): leaves are device_put with the *new*
+sharding.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SEP = "__"
+
+
+def _flatten(tree: Any, path: tuple[str, ...] = ()) -> dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], path + (str(k),)))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, path + (f"[{i}]",)))
+    else:
+        out[SEP.join(path)] = tree
+    return out
+
+
+def _unflatten(flat: dict[str, Any], template: Any, path: tuple[str, ...] = ()):
+    if isinstance(template, dict):
+        return {k: _unflatten(flat, template[k], path + (str(k),))
+                for k in template}
+    if isinstance(template, (list, tuple)):
+        seq = [_unflatten(flat, v, path + (f"[{i}]",))
+               for i, v in enumerate(template)]
+        return type(template)(seq) if isinstance(template, tuple) else seq
+    return flat[SEP.join(path)]
+
+
+def save(tree: Any, directory: str, step: int) -> str:
+    """Atomic checkpoint write.  Returns the committed path."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(tree)
+    meta = {"step": step, "leaves": {}}
+    for name, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        dtype = str(arr.dtype)
+        if dtype == "bfloat16":            # np.save has no native bf16
+            arr = arr.view(np.uint16)
+        np.save(os.path.join(tmp, name + ".npy"), arr)
+        meta["leaves"][name] = {"shape": list(arr.shape), "dtype": dtype}
+    with open(os.path.join(tmp, "METADATA.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, template: Any, step: Optional[int] = None,
+            shardings: Optional[Any] = None) -> tuple[Any, int]:
+    """Load a checkpoint into the structure of ``template``.
+
+    ``shardings``: optional pytree (congruent with template) of Shardings for
+    elastic restore onto a different mesh.  Returns (tree, step)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "METADATA.json")) as f:
+        meta = json.load(f)
+    flat_shard = _flatten(shardings) if shardings is not None else None
+    flat = {}
+    for name, info in meta["leaves"].items():
+        arr = np.load(os.path.join(path, name + ".npy"))
+        if info["dtype"] == "bfloat16":
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        if flat_shard is not None and name in flat_shard \
+                and flat_shard[name] is not None:
+            flat[name] = jax.device_put(arr, flat_shard[name])
+        else:
+            flat[name] = jnp.asarray(arr)
+    return _unflatten(flat, template), step
+
+
+def retain(directory: str, keep: int = 3) -> None:
+    """Delete all but the newest ``keep`` checkpoints."""
+    if not os.path.isdir(directory):
+        return
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+class CheckpointManager:
+    """save-every-N + retention + restore-or-init, used by the train driver."""
+
+    def __init__(self, directory: str, every: int = 100, keep: int = 3):
+        self.directory = directory
+        self.every = every
+        self.keep = keep
+
+    def maybe_save(self, tree: Any, step: int, force: bool = False) -> bool:
+        if not force and (step == 0 or step % self.every):
+            return False
+        save(tree, self.directory, step)
+        retain(self.directory, self.keep)
+        return True
+
+    def restore_or_none(self, template: Any, shardings=None):
+        try:
+            return restore(self.directory, template, shardings=shardings)
+        except FileNotFoundError:
+            return None

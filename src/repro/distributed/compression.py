@@ -1,0 +1,60 @@
+"""Gradient compression for the cross-pod (DCN) all-reduce.
+
+int8 uniform quantization with *error feedback* (residual carried to the next
+step), applied only to the slow ``pod`` axis — the intra-pod ICI all-reduce
+stays exact.  Error feedback makes the compressed SGD trajectory converge to
+the uncompressed one (Karimireddy et al. 2019); tested in
+tests/test_distributed.py (compression error shrinks vs no-feedback).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_state_init(grads: Any) -> Any:
+    """Zero residuals, congruent with the grad pytree."""
+    return jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+
+def _quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compressed_psum(grads: Any, residuals: Any, axis_name: str
+                    ) -> tuple[Any, Any]:
+    """int8 psum over ``axis_name`` with error feedback.
+
+    Returns (mean-reduced grads, new residuals).  Wire cost on hardware:
+    1 byte/element + one f32 scale per leaf (vs 4 bytes uncompressed).  The
+    XLA emulation below psums the *dequantized* values (numerically identical
+    to an int8-payload collective with per-device scales); a production DCN
+    backend would ship the int8 payload itself."""
+    n = jax.lax.psum(1, axis_name)
+
+    def leaf(g, r):
+        x = g.astype(jnp.float32) + r
+        q, scale = _quantize(x)
+        deq = q.astype(jnp.float32) * scale
+        new_r = x - deq                        # error feedback
+        # int8 wire: sum int32 of int8 payloads; scales are per-device, so
+        # psum the dequantized contribution (scale ⊗ int8) — payload stays
+        # 1 B/elem on the wire, scales are O(1).
+        summed = jax.lax.psum(deq, axis_name)
+        return (summed / n).astype(g.dtype), new_r
+
+    pairs = jax.tree.map(leaf, grads, residuals)
+    reduced = jax.tree.map(lambda t: t[0], pairs,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    new_res = jax.tree.map(lambda t: t[1], pairs,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    return reduced, new_res
+
+
+def plain_psum(grads: Any, axis_name: str) -> Any:
+    n = jax.lax.psum(1, axis_name)
+    return jax.tree.map(lambda g: jax.lax.psum(g, axis_name) / n, grads)

@@ -1,0 +1,137 @@
+"""Elastic scaling + fault tolerance orchestration (driver-level).
+
+On a real cluster these callbacks wrap the JAX distributed runtime; in this
+repo the same state machine drives the train/serve drivers with *injected*
+failures (tests/test_distributed.py, examples/train_small.py --inject-failure).
+
+Policy (DESIGN.md §5):
+  * a failed host removes one ``data``-axis row -> new mesh (data-1, model);
+    model-axis failures are fatal for the affected pod (its TP shards are
+    incomplete) -> the pod drops out and the request stream is re-balanced.
+  * params are restored from the latest checkpoint with the *new* mesh's
+    shardings (checkpoint.restore handles cross-mesh placement).
+  * the global batch is kept constant: per-replica micro-batch grows.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+
+
+@dataclasses.dataclass
+class ClusterState:
+    data: int
+    model: int
+    pods: int = 1
+    failed_hosts: int = 0
+
+    @property
+    def n_devices(self) -> int:
+        return self.pods * self.data * self.model
+
+
+@dataclasses.dataclass
+class ElasticDecision:
+    action: str              # "continue" | "rescale" | "halt"
+    new_state: ClusterState
+    reason: str = ""
+
+
+class ElasticManager:
+    """Decides mesh reconfiguration on failure / capacity-change events."""
+
+    def __init__(self, state: ClusterState, min_data: int = 1):
+        self.state = state
+        self.min_data = min_data
+
+    def on_failure(self, axis: str = "data", count: int = 1) -> ElasticDecision:
+        s = self.state
+        if axis == "model":
+            if s.pods > 1:
+                new = ClusterState(s.data, s.model, s.pods - 1,
+                                   s.failed_hosts + count)
+                self.state = new
+                return ElasticDecision("rescale", new,
+                                       "model-axis failure: drop pod")
+            return ElasticDecision("halt", s, "TP shard lost, single pod")
+        new_data = s.data - count
+        if new_data < self.min_data:
+            return ElasticDecision("halt", s, "below minimum data parallelism")
+        new = ClusterState(new_data, s.model, s.pods, s.failed_hosts + count)
+        self.state = new
+        return ElasticDecision("rescale", new, f"data axis {s.data}->{new_data}")
+
+    def on_capacity(self, added_rows: int) -> ElasticDecision:
+        s = self.state
+        new = ClusterState(s.data + added_rows, s.model, s.pods)
+        self.state = new
+        return ElasticDecision("rescale", new, f"scale up +{added_rows} rows")
+
+
+def make_mesh_for(state: ClusterState, devices=None):
+    shape = ((state.pods, state.data, state.model) if state.pods > 1
+             else (state.data, state.model))
+    axes = (("pod", "data", "model") if state.pods > 1 else ("data", "model"))
+    if devices is not None:
+        n = math.prod(shape)
+        import numpy as np
+        return jax.sharding.Mesh(
+            np.asarray(devices[:n]).reshape(shape), axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def per_replica_batch(global_batch: int, state: ClusterState) -> int:
+    """Keep the global batch constant across rescales (grad-noise scale)."""
+    replicas = state.pods * state.data
+    return -(-global_batch // replicas)
+
+
+class StragglerMitigator:
+    """EMA of per-host step times -> rebalanced per-host batch shares.
+
+    The paper's batch scheduler assigns work uniformly; at 1000+ nodes,
+    stragglers (thermal throttling, flaky HBM) stretch every synchronous
+    step.  We shift batch share away from slow hosts, bounded to ±25% so the
+    dense-batch efficiency (discrete batching) is preserved.
+    """
+
+    def __init__(self, n_hosts: int, alpha: float = 0.2, max_skew: float = 0.25):
+        self.n = n_hosts
+        self.alpha = alpha
+        self.max_skew = max_skew
+        self.ema: Optional[list[float]] = None
+
+    def observe(self, step_times: list[float]) -> None:
+        assert len(step_times) == self.n
+        if self.ema is None:
+            self.ema = list(step_times)
+        else:
+            self.ema = [(1 - self.alpha) * e + self.alpha * t
+                        for e, t in zip(self.ema, step_times)]
+
+    def shares(self) -> list[float]:
+        """Batch share per host, normalized to sum 1 (speed-proportional)."""
+        if self.ema is None:
+            return [1.0 / self.n] * self.n
+        speed = [1.0 / max(t, 1e-9) for t in self.ema]
+        mean = sum(speed) / self.n
+        lo, hi = (1 - self.max_skew) * mean, (1 + self.max_skew) * mean
+        speed = [min(max(s, lo), hi) for s in speed]
+        total = sum(speed)
+        return [s / total for s in speed]
+
+    def split_batch(self, global_batch: int, multiple_of: int = 8) -> list[int]:
+        """Integer batch split honoring discrete-batching multiples."""
+        shares = self.shares()
+        raw = [global_batch * s for s in shares]
+        out = [max(multiple_of, int(r // multiple_of) * multiple_of)
+               for r in raw]
+        # fix rounding drift onto the fastest host
+        drift = global_batch - sum(out)
+        fastest = max(range(self.n), key=lambda i: shares[i])
+        out[fastest] = max(multiple_of, out[fastest] + drift)
+        return out

@@ -1,0 +1,198 @@
+"""Pallas TPU decode attention (the paper's memory-bound GEMV op).
+
+Dense variant: grid (B·KV, seq_blocks) — seq minor so the per-(batch, kv
+head) running-softmax scratch persists across the KV-cache sweep.  All G
+query heads of a kv head are processed together (they share the streamed
+K/V block, amortizing the HBM read exactly like the GQA GEMV in the paper's
+Table 2).
+
+Paged variant: same schedule, but K/V live in a global page pool and the
+BlockSpec index map dereferences a scalar-prefetch page table — the TPU
+analogue of PagedAttention's block tables (DESIGN.md §2: page aggregation
+happens at the index-map level; no gather materialization).
+
+VMEM per step (bf16, Bk=256, D=128, G≤16):
+  k,v (256, 128)·2 + q (G, 128) + acc f32 (G, 128) ≈ 0.2 MB.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_K = 256
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, block_k: int, batch: int):
+    bkv = pl.program_id(0)
+    sb = pl.program_id(1)
+    nsb = pl.num_programs(1)
+    b = bkv // (pl.num_programs(0) // batch)
+
+    @pl.when(sb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale                  # (G, D)
+    k = k_ref[0].astype(jnp.float32)                          # (Bk, D)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # (G, Bk)
+
+    kpos = sb * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = kpos < len_ref[b]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + \
+        jnp.dot(p, v_ref[0].astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(sb == nsb - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("logit_scale", "block_k",
+                                             "interpret"))
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array, *,
+                     logit_scale: Optional[float] = None,
+                     block_k: int = DEFAULT_BLOCK_K,
+                     interpret: bool = False) -> jax.Array:
+    """q: (B, H, D); k_cache/v_cache: (B, S, KV, D); cache_len: (B,)."""
+    b, h, d = q.shape
+    _, s, kvh, _ = k_cache.shape
+    group = h // kvh
+    scale = logit_scale if logit_scale is not None else d ** -0.5
+
+    block_k = min(block_k, max(8, s))
+    s_pad = -(-s // block_k) * block_k
+    if s_pad != s:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+
+    qf = q.reshape(b * kvh, group, d)
+    kf = k_cache.transpose(0, 2, 1, 3).reshape(b * kvh, s_pad, d)
+    vf = v_cache.transpose(0, 2, 1, 3).reshape(b * kvh, s_pad, d)
+
+    grid = (b * kvh, s_pad // block_k)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, block_k=block_k, batch=b),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # cache_len
+            pl.BlockSpec((1, group, d), lambda bk, sb: (bk, 0, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bk, sb: (bk, sb, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bk, sb: (bk, sb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, group, d), lambda bk, sb: (bk, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kvh, group, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cache_len, qf, kf, vf)
+    return out.reshape(b, h, d)
+
+
+# ---------------------------------------------------------------------------
+# paged variant: page-table indirection in the BlockSpec index map
+# ---------------------------------------------------------------------------
+def _paged_kernel(page_table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, scale: float, page_size: int):
+    bkv = pl.program_id(1)
+    pi = pl.program_id(2)
+    npi = pl.num_programs(2)
+    b = pl.program_id(0)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale               # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)                       # (PS, D)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # (G, PS)
+
+    kpos = pi * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = (kpos < len_ref[b]) & (page_table_ref[b, pi] >= 0)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + \
+        jnp.dot(p, v_ref[0, 0].astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(pi == npi - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("logit_scale", "interpret"))
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, page_table: jax.Array,
+                           cache_len: jax.Array, *,
+                           logit_scale: Optional[float] = None,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B,H,D); pages: (NP, PS, KV, D); page_table: (B, MAXP) (-1 unused)."""
+    b, h, d = q.shape
+    np_, ps, kvh, _ = k_pages.shape
+    maxp = page_table.shape[1]
+    group = h // kvh
+    scale = logit_scale if logit_scale is not None else d ** -0.5
+
+    qf = q.reshape(b, kvh, group, d)
+    # (NP, PS, KV, D) -> (KV, NP, PS, D): page dim indexable per kv head
+    kf = k_pages.transpose(2, 0, 1, 3)
+    vf = v_pages.transpose(2, 0, 1, 3)
+    safe_table = jnp.maximum(page_table, 0)
+
+    grid = (b, kvh, maxp)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # page_table, cache_len
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, group, d), lambda bb, kv, pi, pt, ln: (bb, kv, 0, 0)),
+            pl.BlockSpec((1, 1, ps, d),
+                         lambda bb, kv, pi, pt, ln: (kv, pt[bb, pi], 0, 0)),
+            pl.BlockSpec((1, 1, ps, d),
+                         lambda bb, kv, pi, pt, ln: (kv, pt[bb, pi], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, d),
+                               lambda bb, kv, pi, pt, ln: (bb, kv, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, scale=scale, page_size=ps),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, group, d), q.dtype),
+        interpret=interpret,
+    )(safe_table, cache_len, qf,
+      kf.reshape(kvh, np_, ps, d), vf.reshape(kvh, np_, ps, d))
+    return out.reshape(b, h, d)

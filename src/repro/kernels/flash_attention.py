@@ -1,0 +1,127 @@
+"""Pallas TPU flash attention (prefill / train path).
+
+Grid: (batch·kv_heads·groups, q_blocks, kv_blocks) — kv minor, so the VMEM
+scratch accumulators (m, l, acc) persist across the kv sweep of one q block
+(standard TPU flash pattern).  Causality skips fully-masked kv blocks via the
+index map + in-block masking.  GQA is handled by folding the q-head group
+into the leading grid dim and mapping kv blocks to the shared kv head.
+
+BlockSpec tiling (VMEM budget per grid step, bf16):
+  q (1, Bq, D) + k,v (1, Bk, D) + acc f32 (Bq, D) + probs f32 (Bq, Bk)
+  with Bq=Bk=256, D=128: ~0.6 MB — comfortably inside the ~16 MB VMEM,
+  leaving room for double buffering; Bq/Bk are multiples of the MXU 128 dim.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+DEFAULT_BLOCK_Q = 256
+DEFAULT_BLOCK_K = 256
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, q_offset: int, block_q: int,
+            block_k: int, seq_kv: int):
+    qb = pl.program_id(1)
+    kb = pl.program_id(2)
+    nkb = pl.num_programs(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (Bq, D)
+    k = k_ref[0].astype(jnp.float32)                  # (Bk, D)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (Bq, Bk)
+
+    qpos = qb * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) \
+        + q_offset
+    kpos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = kpos < seq_kv
+    if causal:
+        mask = mask & (qpos >= kpos)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + \
+        jnp.dot(p, v_ref[0].astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kb == nkb - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "logit_scale", "q_offset", "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    logit_scale: Optional[float] = None,
+                    q_offset: int = 0,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, Sq, H, D); k, v: (B, Skv, KV, D).  Returns (B, Sq, H, D)."""
+    b, sq, h, d = q.shape
+    _, skv, kvh, _ = k.shape
+    assert h % kvh == 0
+    group = h // kvh
+    scale = logit_scale if logit_scale is not None else d ** -0.5
+
+    block_q = min(block_q, max(8, sq))
+    block_k = min(block_k, max(8, skv))
+    sq_pad = -(-sq // block_q) * block_q
+    skv_pad = -(-skv // block_k) * block_k
+    if sq_pad != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_pad - sq), (0, 0), (0, 0)))
+    if skv_pad != skv:
+        k = jnp.pad(k, ((0, 0), (0, skv_pad - skv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, skv_pad - skv), (0, 0), (0, 0)))
+
+    # fold batch/head into a single leading grid dim: (B*H, S, D)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq_pad, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kvh, skv_pad, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kvh, skv_pad, d)
+
+    grid = (b * h, sq_pad // block_q, skv_pad // block_k)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal,
+                          q_offset=q_offset, block_q=block_q,
+                          block_k=block_k, seq_kv=skv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qb, kb: (bh, qb, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda bh, qb, kb, _g=group: (bh // _g, kb, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda bh, qb, kb, _g=group: (bh // _g, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qb, kb: (bh, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq_pad, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),   # m (running max)
+            pltpu.VMEM((block_q,), jnp.float32),   # l (running denom)
+            pltpu.VMEM((block_q, d), jnp.float32), # acc
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+
+    out = out.reshape(b, h, sq_pad, d).transpose(0, 2, 1, 3)
+    return out[:, :sq]

@@ -1,0 +1,175 @@
+"""Fused GEMM + decode-attention Pallas kernel — NanoFlow's execution-unit
+scheduling adapted to TPU (DESIGN.md §2).
+
+The paper co-schedules a compute-bound GEMM kernel and a memory-bound decode
+GEMV kernel on disjoint SM partitions.  A TPU core has no SM pool, but it
+*does* have independent MXU pipelines and DMA engines: inside a single
+``pallas_call``, each grid step is assigned BOTH one GEMM tile (MXU work) and
+one decode-attention unit (a (batch-row, kv-seq-block) whose K/V block is a
+pure DMA stream).  Pallas double-buffers block DMA across grid steps, so the
+KV-cache stream of step g+1 is in flight while step g's GEMM tile occupies
+the MXU — the same "keep the bottleneck resource busy" effect, with a
+*static* partition instead of the paper's interference-prone multi-stream
+launch.
+
+The ``gemm_fraction`` knob (set by core/autosearch) picks the GEMM tile size,
+i.e. the MXU-work : DMA-work ratio per grid step — the TPU analogue of the
+paper's SM-count ratio.
+
+Grid: (T,) with T = max(gemm_tiles, attn_units); attention units are ordered
+seq-minor per batch row so the running-softmax scratch carries across a
+row's kv sweep.
+
+VMEM per step (bf16): x (bm, K) + w (K, bn) + out (bm, bn)
+  + kv (1, bs, KV·D) ·2 + attn scratch f32.  With bm=bn=256, K=4096, bs=256,
+  KV·D=1024: ≈ 4.5 MB — fits v5e VMEM with double buffering.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, x_ref, w_ref, q_ref, k_ref, v_ref,
+            gemm_out_ref, attn_out_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, n_gemm: int, n_attn: int, n_sb: int, block_s: int,
+            batch: int):
+    g = pl.program_id(0)
+
+    # ---- GEMM tile (MXU stream) ----
+    @pl.when(g < n_gemm)
+    def _gemm():
+        gemm_out_ref[...] = jnp.dot(
+            x_ref[...], w_ref[...],
+            preferred_element_type=jnp.float32).astype(gemm_out_ref.dtype)
+
+    # ---- decode-attention unit (DMA stream) ----
+    @pl.when(g < n_attn)
+    def _attn():
+        row = g // n_sb
+        sb = g % n_sb
+
+        @pl.when(sb == 0)
+        def _init():
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        q = q_ref[0].astype(jnp.float32) * scale          # (KV, G, D)
+        k = k_ref[0].astype(jnp.float32)                  # (Bs, KV, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jnp.einsum("hgd,shd->hgs", q, k)              # (KV, G, Bs)
+
+        kpos = sb * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        valid = kpos < len_ref[row]
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[..., None] + \
+            jnp.einsum("hgs,shd->hgd", p, v)
+        m_ref[...] = m_new
+
+        @pl.when(sb == n_sb - 1)
+        def _finalize():
+            denom = jnp.maximum(l_ref[...], 1e-30)[..., None]
+            attn_out_ref[0] = (acc_ref[...] / denom).astype(attn_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "gemm_fraction", "block_m", "block_n", "block_s", "interpret"))
+def fused_overlap(x: jax.Array, w: jax.Array, q: jax.Array,
+                  k_cache: jax.Array, v_cache: jax.Array,
+                  cache_len: jax.Array, *, gemm_fraction: float = 0.5,
+                  block_m: int = 0, block_n: int = 256, block_s: int = 256,
+                  interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """x: (M, K) @ w: (K, N) co-scheduled with decode attention over
+    q (B, H, D) × cache (B, S, KV, D).  Returns (gemm_out, attn_out)."""
+    m, kdim = x.shape
+    _, n = w.shape
+    b, h, d = q.shape
+    _, s, kvh, _ = k_cache.shape
+    group = h // kvh
+    scale = d ** -0.5
+
+    # gemm_fraction -> MXU tile size per grid step (the unit-ratio knob)
+    if block_m == 0:
+        block_m = max(64, int(512 * gemm_fraction) // 64 * 64)
+    block_m = min(block_m, max(8, m))
+    block_n = min(block_n, max(8, n))
+    block_s = min(block_s, max(8, s))
+
+    m_pad = -(-m // block_m) * block_m
+    n_pad = -(-n // block_n) * block_n
+    s_pad = -(-s // block_s) * block_s
+    if m_pad != m:
+        x = jnp.pad(x, ((0, m_pad - m), (0, 0)))
+    if n_pad != n:
+        w = jnp.pad(w, ((0, 0), (0, n_pad - n)))
+    if s_pad != s:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+
+    n_mi, n_ni = m_pad // block_m, n_pad // block_n
+    n_gemm = n_mi * n_ni
+    n_sb = s_pad // block_s
+    n_attn = b * n_sb
+    t = max(n_gemm, n_attn)
+
+    qf = q.reshape(b, kvh, group, d)
+
+    def x_map(g):
+        return (jnp.minimum(g // n_ni, n_mi - 1), 0)
+
+    def w_map(g):
+        return (0, jnp.minimum(g % n_ni, n_ni - 1))
+
+    def out_map(g):
+        return (jnp.minimum(g // n_ni, n_mi - 1),
+                jnp.minimum(g % n_ni, n_ni - 1))
+
+    def q_map(g):
+        return (jnp.minimum(g // n_sb, b - 1), 0, 0, 0)
+
+    def kv_map(g):
+        return (jnp.minimum(g // n_sb, b - 1), g % n_sb, 0, 0)
+
+    gemm_out, attn_out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, n_gemm=n_gemm, n_attn=n_attn,
+                          n_sb=n_sb, block_s=block_s, batch=b),
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),            # cache_len
+            pl.BlockSpec((block_m, kdim), x_map),
+            pl.BlockSpec((kdim, block_n), w_map),
+            pl.BlockSpec((1, kvh, group, d), q_map),
+            pl.BlockSpec((1, block_s, kvh, d), kv_map),
+            pl.BlockSpec((1, block_s, kvh, d), kv_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, block_n), out_map),
+            pl.BlockSpec((1, kvh, group, d), q_map),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m_pad, n_pad), x.dtype),
+            jax.ShapeDtypeStruct((b, kvh, group, d), q.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((kvh, group), jnp.float32),
+            pltpu.VMEM((kvh, group), jnp.float32),
+            pltpu.VMEM((kvh, group, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cache_len, x, w, qf, k_cache, v_cache)
+
+    return gemm_out[:m, :n], attn_out.reshape(b, h, d)

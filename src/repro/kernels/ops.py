@@ -1,0 +1,110 @@
+"""Jitted kernel entry points with implementation dispatch.
+
+``impl`` selects the execution path:
+  * ``"ref"``       — pure-jnp oracle (differentiable; the XLA/GSPMD path used
+                      on CPU and inside the dry-run lowering)
+  * ``"pallas"``    — TPU Pallas kernel (compiled; requires TPU backend)
+  * ``"interpret"`` — Pallas kernel body interpreted on CPU (kernel tests)
+
+Default comes from ``set_default_impl`` / env REPRO_KERNEL_IMPL, falling back
+to "ref" on non-TPU backends and "pallas" on TPU.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+from repro.kernels import ref as _ref
+
+_DEFAULT: Optional[str] = None
+
+
+def set_default_impl(impl: Optional[str]) -> None:
+    global _DEFAULT
+    _DEFAULT = impl
+
+
+def default_impl() -> str:
+    if _DEFAULT is not None:
+        return _DEFAULT
+    env = os.environ.get("REPRO_KERNEL_IMPL")
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _resolve(impl: Optional[str]) -> str:
+    return impl if impl is not None else default_impl()
+
+
+def _attn_fast() -> bool:
+    """§Perf HC3 toggle: no-upcast attention refs (see kernels/ref.py)."""
+    return os.environ.get("REPRO_ATTN_FAST", "0") == "1"
+
+
+# ---------------------------------------------------------------------------
+def flash_attention(q, k, v, *, causal=True, logit_scale=None, q_offset=0,
+                    impl: Optional[str] = None):
+    impl = _resolve(impl)
+    if impl == "ref":
+        if os.environ.get("REPRO_ATTN_STREAM", "0") == "1" and q.shape[1] > 512:
+            return _ref.flash_attention_stream(
+                q, k, v, causal=causal, logit_scale=logit_scale,
+                q_offset=q_offset)
+        fn = _ref.flash_attention_fast if _attn_fast() \
+            else _ref.flash_attention_ref
+        return fn(q, k, v, causal=causal, logit_scale=logit_scale,
+                  q_offset=q_offset)
+    from repro.kernels import flash_attention as _fa
+    return _fa.flash_attention(q, k, v, causal=causal, logit_scale=logit_scale,
+                               q_offset=q_offset, interpret=(impl == "interpret"))
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, logit_scale=None,
+                     impl: Optional[str] = None):
+    impl = _resolve(impl)
+    if impl == "ref":
+        fn = _ref.decode_attention_fast if _attn_fast() \
+            else _ref.decode_attention_ref
+        return fn(q, k_cache, v_cache, cache_len, logit_scale=logit_scale)
+    from repro.kernels import decode_attention as _da
+    return _da.decode_attention(q, k_cache, v_cache, cache_len,
+                                logit_scale=logit_scale,
+                                interpret=(impl == "interpret"))
+
+
+def paged_decode_attention(q, k_pages, v_pages, page_table, cache_len, *,
+                           logit_scale=None, impl: Optional[str] = None):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.paged_decode_attention_ref(q, k_pages, v_pages, page_table,
+                                               cache_len, logit_scale=logit_scale)
+    from repro.kernels import decode_attention as _da
+    return _da.paged_decode_attention(q, k_pages, v_pages, page_table,
+                                      cache_len, logit_scale=logit_scale,
+                                      interpret=(impl == "interpret"))
+
+
+def fused_overlap(x, w, q, k_cache, v_cache, cache_len, *,
+                  gemm_fraction: float = 0.5, impl: Optional[str] = None):
+    """NanoFlow signature op: GEMM co-scheduled with decode attention.
+
+    ``gemm_fraction`` — fraction of grid steps assigned to GEMM tiles (the
+    TPU analogue of the paper's SM-partition ratio; autosearch sets it)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.fused_overlap_ref(x, w, q, k_cache, v_cache, cache_len)
+    from repro.kernels import fused_overlap as _fo
+    return _fo.fused_overlap(x, w, q, k_cache, v_cache, cache_len,
+                             gemm_fraction=gemm_fraction,
+                             interpret=(impl == "interpret"))
+
+
+def ssm_scan(x, dt, a, b, c, d, h0=None, *, impl: Optional[str] = None):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.ssm_scan_ref(x, dt, a, b, c, d, h0)
+    from repro.kernels import ssm_scan as _ss
+    return _ss.ssm_scan(x, dt, a, b, c, d, h0, interpret=(impl == "interpret"))

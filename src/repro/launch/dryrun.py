@@ -1,0 +1,241 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production mesh, prove it fits (memory_analysis), and extract the
+roofline terms (cost_analysis + HLO collective bytes).
+
+The two lines above MUST stay first: jax locks the device count on first
+init.  Do not import this module from test/bench processes — run it as
+``python -m repro.launch.dryrun``.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape decode_32k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results/]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, applicable_shapes, get_config, list_configs
+from repro.launch.hlo_analysis import analyze_module
+from repro.distributed.sharding import (RULES_LONG_CTX, RULES_TP_DP, use_mesh)
+from repro.launch.mesh import make_production_mesh, tp_size
+from repro.models import model as model_lib
+from repro.training.trainer import TrainConfig, make_train_step, train_state_shapes
+
+ASSIGNED = [
+    "jamba-1.5-large-398b", "xlstm-1.3b", "qwen3-4b", "minitron-4b",
+    "qwen3-8b", "starcoder2-7b", "llava-next-34b", "musicgen-medium",
+    "arctic-480b", "deepseek-v2-236b",
+]
+
+# ---------------------------------------------------------------------------
+# per-cell lowering
+# ---------------------------------------------------------------------------
+HBM_PER_CHIP = 16e9          # v5e
+
+
+def needs_fsdp(cfg, tp: int) -> bool:
+    """2D weight sharding (model×data) when TP alone can't fit the params
+    in HBM with room for KV/activations (jamba-398B, arctic-480B,
+    deepseek-236B at TP=16)."""
+    from repro.models.model import num_params
+    return num_params(cfg) * 2 / tp > 0.75 * HBM_PER_CHIP
+
+
+def build_lowered(arch: str, shape_name: str, *, multi_pod: bool = False,
+                  remat: str = "full", variant: str = "baseline",
+                  fsdp: str = "auto", coschedule: int = 0):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = dict(RULES_LONG_CTX if shape_name == "long_500k" else RULES_TP_DP)
+    rules.update(VARIANTS[variant])
+    tp = tp_size(mesh)
+    if fsdp == "on" or (fsdp == "auto" and needs_fsdp(cfg, tp)):
+        rules["w_embed"] = "data"        # 2D weight sharding (FSDP x TP)
+
+    with use_mesh(mesh, rules):
+        pshapes = model_lib.shapes(cfg, tp, mesh, rules)
+        specs = model_lib.input_specs(cfg, shape, mesh=mesh, rules=rules, tp=tp)
+        if shape.step == "train":
+            tc = TrainConfig(remat=remat)
+            step = make_train_step(cfg, tc)
+            _, opt_shapes = train_state_shapes(cfg, tp, mesh, rules)
+            lowered = jax.jit(step, donate_argnums=(0, 1)).lower(
+                pshapes, opt_shapes, specs)
+        elif shape.step == "prefill":
+            def prefill_step(params, batch):
+                return model_lib.prefill(cfg, params, batch["tokens"],
+                                         patches=batch.get("patches"), tp=tp)
+            lowered = jax.jit(prefill_step).lower(pshapes, specs)
+        elif coschedule == 0:
+            def serve_step(params, tokens, cache, cache_len):
+                return model_lib.forward_decode(cfg, params, tokens, cache,
+                                                cache_len)
+            lowered = jax.jit(serve_step, donate_argnums=(2,)).lower(
+                pshapes, specs["tokens"], specs["cache"], specs["cache_len"])
+        else:
+            # §Perf HC3: the NanoFlow serving iteration — decode co-scheduled
+            # with a chunked-prefill nano-batch (paper §4.2/§4.3).  The
+            # prefill GEMMs give the iteration compute-bound work while the
+            # decode KV sweep streams; XLA's scheduler can overlap them
+            # because the two nano-batches share no dependencies.
+            from jax.sharding import NamedSharding
+            from repro.distributed.sharding import logical_to_pspec
+            pre_b = mesh.shape["data"]        # divisible by the DP axis
+            pre_s = max(coschedule // pre_b, 8)
+            extra = (cfg.num_codebooks,) if cfg.frontend == "audio" else ()
+            pre_tokens = jax.ShapeDtypeStruct(
+                (pre_b, pre_s) + extra, jnp.int32,
+                sharding=NamedSharding(mesh, logical_to_pspec(
+                    ("batch", "act_seq") + ((None,) if extra else ()),
+                    mesh, rules)))
+
+            def serve_step_fused(params, tokens, cache, cache_len, p_tokens):
+                dec_logits, new_cache = model_lib.forward_decode(
+                    cfg, params, tokens, cache, cache_len)
+                pre_logits, _aux, states = model_lib.forward_full(
+                    cfg, params, p_tokens, return_states=True)
+                return dec_logits, new_cache, pre_logits[:, -1], states
+
+            lowered = jax.jit(serve_step_fused, donate_argnums=(2,)).lower(
+                pshapes, specs["tokens"], specs["cache"], specs["cache_len"],
+                pre_tokens)
+    return lowered, mesh
+
+
+# sharding-rule variants for §Perf hillclimbing
+VARIANTS: dict[str, dict] = {
+    "baseline": {},
+    # shard long-context KV over data even for batch>1 (sequence parallelism)
+    "seq_shard_kv": {"kv_seq": "data"},
+    # replicate activations fully within a layer (no TP on activations)
+    "no_tp_act": {"act_heads": None, "act_kv_heads": None, "act_ff": None},
+    # pure data parallelism over ALL mesh axes — the right production mapping
+    # for small models (xlstm-1.3b): no TP collectives at all (§Perf HC1)
+    "pure_dp": {"batch": "all", "heads": None, "kv_heads": None, "ff": None,
+                "vocab": None, "experts": None, "inner": None, "dv": None,
+                "lora": None,
+                "act_heads": None, "act_kv_heads": None, "act_ff": None,
+                "act_vocab": None, "act_experts": None, "act_inner": None,
+                "act_dv": None},
+}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, remat: str,
+             variant: str = "baseline", fsdp: str = "auto",
+             coschedule: int = 0) -> dict:
+    t0 = time.time()
+    lowered, mesh = build_lowered(arch, shape_name, multi_pod=multi_pod,
+                                  remat=remat, variant=variant, fsdp=fsdp,
+                                  coschedule=coschedule)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    coll = analyze_module(compiled.as_text())
+    n_dev = mesh.size
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "variant": variant, "remat": remat, "coschedule": coschedule,
+        "fsdp": fsdp if fsdp != "auto" else
+            ("on" if needs_fsdp(get_config(arch), tp_size(mesh)) else "off"),
+        "n_devices": n_dev,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        # trip-count-expanded HLO walk (launch/hlo_analysis.py) — XLA's own
+        # cost_analysis counts while bodies once, so its raw numbers are kept
+        # only for reference.
+        "flops_per_device": float(coll["dot_flops"]),
+        "bytes_per_device": float(coll["io_bytes"]),
+        "xla_flops_raw": cost.get("flops", 0.0),
+        "xla_bytes_raw": cost.get("bytes accessed", 0.0),
+        "collectives": coll,
+        "memory": {
+            "argument_gb": mem.argument_size_in_bytes / 1e9,
+            "output_gb": mem.output_size_in_bytes / 1e9,
+            "temp_gb": mem.temp_size_in_bytes / 1e9,
+            "alias_gb": mem.alias_size_in_bytes / 1e9,
+        } if mem else None,
+        "ok": True,
+    }
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--fsdp", default="auto", choices=("auto", "on", "off"))
+    ap.add_argument("--coschedule", type=int, default=0,
+                    help="prefill-chunk tokens co-scheduled with decode")
+    ap.add_argument("--variant", default="baseline", choices=sorted(VARIANTS))
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    if args.all:
+        for arch in ASSIGNED:
+            for shape in applicable_shapes(get_config(arch)):
+                cells.append((arch, shape.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}" \
+                  f"__{args.variant}" + (f"__{args.remat}" if args.remat != "full" else "")
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path) and not args.force:
+                print(f"[skip] {tag}", flush=True)
+                continue
+            print(f"[run ] {tag}", flush=True)
+            try:
+                res = run_cell(arch, shape, multi_pod=mp, remat=args.remat,
+                               variant=args.variant, fsdp=args.fsdp,
+                               coschedule=args.coschedule)
+            except Exception as e:  # noqa: BLE001 — record the failure
+                failures += 1
+                res = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "variant": args.variant, "ok": False,
+                       "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]}
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            if res["ok"]:
+                mem = res["memory"]
+                print(f"   ok: compile {res['compile_s']}s, "
+                      f"flops/dev {res['flops_per_device']:.3e}, "
+                      f"coll {res['collectives']['total_bytes']/1e9:.2f} GB/dev, "
+                      f"args {mem['argument_gb']:.1f} GB", flush=True)
+            else:
+                print(f"   FAIL: {res['error']}", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

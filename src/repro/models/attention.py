@@ -1,0 +1,284 @@
+"""Attention blocks: GQA (with qk-norm) and DeepSeek-V2 MLA.
+
+TP head layout
+--------------
+When tensor-parallel degree ``tp`` does not divide the head counts we use an
+*effective layout* (see DESIGN.md §4):
+
+  * MHA (group==1): pad q and kv heads together to the next multiple of tp.
+  * GQA: replicate each kv head r = tp/gcd(kv, tp) times; distribute its g
+    q-heads across the replicas in groups of g_eff = ceil(g/r), zero-padding
+    the ragged remainder.  Heads are stored kv-major so each shard's q heads
+    find their kv head locally.
+
+Padding is numerically exact for inference (padded O-projection rows are
+zero-init).  kv replication is exact for inference; for *training* with
+tp ∤ kv the replicas are free parameters (slightly larger model) — documented
+in DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models.layers import apply_rope, apply_rope_nohead, rmsnorm, shard
+from repro.models.param import ParamDef
+
+
+@dataclasses.dataclass(frozen=True)
+class HeadLayout:
+    n_heads: int          # original q heads
+    n_kv: int             # original kv heads
+    nh_eff: int
+    kv_eff: int
+    g_eff: int            # q heads per effective kv head
+    replication: int      # kv replication factor r
+
+
+def head_layout(n_heads: int, n_kv: int, tp: int) -> HeadLayout:
+    assert n_heads % n_kv == 0, (n_heads, n_kv)
+    g = n_heads // n_kv
+    if g == 1:
+        nh_eff = kv_eff = math.ceil(n_heads / tp) * tp
+        return HeadLayout(n_heads, n_kv, nh_eff, kv_eff, 1, 1)
+    r = tp // math.gcd(n_kv, tp)
+    kv_eff = n_kv * r
+    g_eff = math.ceil(g / r)
+    return HeadLayout(n_heads, n_kv, kv_eff * g_eff, kv_eff, g_eff, r)
+
+
+def qhead_permutation(hl: HeadLayout) -> tuple[list[int], list[int]]:
+    """Map original q-head index -> effective slot (kv-major layout).
+
+    Returns (slots, pad_slots): slots[i] = eff index of original q head i;
+    pad_slots = eff indices that hold zero-padded heads.
+    """
+    g = hl.n_heads // hl.n_kv
+    slots, used = [], set()
+    for h in range(hl.n_heads):
+        kv = h // g
+        j = h % g                        # index within the kv group
+        rep, within = divmod(j, hl.g_eff)
+        eff_kv = kv * hl.replication + rep
+        slot = eff_kv * hl.g_eff + within
+        slots.append(slot)
+        used.add(slot)
+    pad = [s for s in range(hl.nh_eff) if s not in used]
+    return slots, pad
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+def gqa_defs(cfg: ModelConfig, tp: int) -> dict:
+    hl = head_layout(cfg.n_heads, cfg.n_kv_heads, tp)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    dt = cfg.dtype
+    defs = {
+        "wq": ParamDef((d, hl.nh_eff, hd), ("w_embed", "heads", "head_dim"), dtype=dt),
+        "wk": ParamDef((d, hl.kv_eff, hd), ("w_embed", "kv_heads", "head_dim"), dtype=dt),
+        "wv": ParamDef((d, hl.kv_eff, hd), ("w_embed", "kv_heads", "head_dim"), dtype=dt),
+        "wo": ParamDef((hl.nh_eff, hd, d), ("heads", "head_dim", "w_embed"),
+                       dtype=dt, fan_in_axes=(0, 1)),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((hd,), ("head_dim",), init="ones", dtype=dt)
+        defs["k_norm"] = ParamDef((hd,), ("head_dim",), init="ones", dtype=dt)
+    return defs
+
+
+def _qkv(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array):
+    """Shared projection path.  x: (B, S, D) -> q (B,S,He,hd), k/v (B,S,KVe,hd)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = shard(q, "batch", "act_seq", "act_heads", None)
+    k = shard(k, "batch", "act_seq", "act_kv_heads", None)
+    v = shard(v, "batch", "act_seq", "act_kv_heads", None)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_full(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
+             *, q_offset=0, kv_prefix: Optional[tuple] = None,
+             return_kv: bool = False):
+    """Train / prefill attention over the whole chunk.
+
+    kv_prefix: optional (k, v, prefix_len) earlier-cache tensors for chunked
+    prefill — prepended to this chunk's K/V before the causal attention.
+    """
+    q, k, v = _qkv(cfg, p, x, positions)
+    k_all, v_all = k, v
+    if kv_prefix is not None:
+        pk, pv, _plen = kv_prefix
+        k_all = jnp.concatenate([pk, k], axis=1)
+        v_all = jnp.concatenate([pv, v], axis=1)
+    out = ops.flash_attention(q, k_all, v_all, causal=True, q_offset=q_offset)
+    out = shard(out, "batch", "act_seq", "act_heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    y = shard(y, "batch", "act_seq", "embed")
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def gqa_decode(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
+               cache: dict, cache_len: jax.Array):
+    """Single-token decode.  x: (B, 1, D); cache{k,v}: (B, S, KVe, hd);
+    cache_len: (B,) valid positions *before* this token.  Writes the new
+    token's KV at cache_len, then attends over cache_len+1 positions."""
+    q, k_new, v_new = _qkv(cfg, p, x, positions)
+    k_cache = _write_at(cache["k"], k_new[:, 0], cache_len)
+    v_cache = _write_at(cache["v"], v_new[:, 0], cache_len)
+    k_cache = shard(k_cache, "batch", "kv_seq", "act_kv_heads", None)
+    v_cache = shard(v_cache, "batch", "kv_seq", "act_kv_heads", None)
+    out = ops.decode_attention(q[:, 0], k_cache, v_cache, cache_len + 1)
+    out = shard(out, "batch", "act_heads", None)
+    y = jnp.einsum("bhk,hkd->bd", out, p["wo"])[:, None, :]
+    y = shard(y, "batch", "act_seq", "embed")
+    return y, {"k": k_cache, "v": v_cache}
+
+
+def _write_at(cache: jax.Array, new: jax.Array, idx: jax.Array) -> jax.Array:
+    """cache: (B, S, ...); new: (B, ...); idx: (B,) — per-row dynamic write."""
+    def one(c, n, i):
+        return jax.lax.dynamic_update_slice(c, n[None], (i,) + (0,) * (c.ndim - 1))
+    return jax.vmap(one)(cache, new, idx)
+
+
+def gqa_init_cache(cfg: ModelConfig, tp: int, batch: int, max_len: int) -> dict:
+    hl = head_layout(cfg.n_heads, cfg.n_kv_heads, tp)
+    hd = cfg.resolved_head_dim
+    shape = (batch, max_len, hl.kv_eff, hd)
+    return {"k": jnp.zeros(shape, jnp.dtype(cfg.dtype)),
+            "v": jnp.zeros(shape, jnp.dtype(cfg.dtype))}
+
+
+def gqa_cache_axes() -> dict:
+    return {"k": ("batch", "kv_seq", "act_kv_heads", None),
+            "v": ("batch", "kv_seq", "act_kv_heads", None)}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): low-rank latent KV; decode runs the absorbed form so the
+# cache holds only (c_kv, k_rope) per token.
+# ---------------------------------------------------------------------------
+def mla_defs(cfg: ModelConfig, tp: int) -> dict:
+    m = cfg.mla
+    assert m is not None
+    d, dt = cfg.d_model, cfg.dtype
+    nh = math.ceil(cfg.n_heads / tp) * tp          # pad heads to tp multiple
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "wdq": ParamDef((d, m.q_lora_rank), ("w_embed", "lora"), dtype=dt),
+        "q_ln": ParamDef((m.q_lora_rank,), ("lora",), init="ones", dtype=dt),
+        "wuq": ParamDef((m.q_lora_rank, nh, qk), ("lora", "heads", "head_dim"), dtype=dt),
+        "wdkv": ParamDef((d, m.kv_lora_rank), ("w_embed", "lora"), dtype=dt),
+        "kv_ln": ParamDef((m.kv_lora_rank,), ("lora",), init="ones", dtype=dt),
+        "wkr": ParamDef((d, m.qk_rope_dim), ("w_embed", "head_dim"), dtype=dt),
+        "wuk": ParamDef((m.kv_lora_rank, nh, m.qk_nope_dim),
+                        ("lora", "heads", "head_dim"), dtype=dt),
+        "wuv": ParamDef((m.kv_lora_rank, nh, m.v_head_dim),
+                        ("lora", "heads", "head_dim"), dtype=dt),
+        "wo": ParamDef((nh, m.v_head_dim, d), ("heads", "head_dim", "w_embed"),
+                       dtype=dt, fan_in_axes=(0, 1)),
+    }
+
+
+def _mla_q(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array):
+    m = cfg.mla
+    cq = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["wdq"]), p["q_ln"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wuq"])
+    q = shard(q, "batch", "act_seq", "act_heads", None)
+    q_nope = q[..., : m.qk_nope_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array):
+    m = cfg.mla
+    c_kv = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["wdkv"]), p["kv_ln"], cfg.norm_eps)
+    k_rope = apply_rope_nohead(jnp.einsum("bsd,dr->bsr", x, p["wkr"]),
+                               positions, cfg.rope_theta)
+    return c_kv, k_rope          # (B,S,rank), (B,S,rope_dim)
+
+
+def mla_full(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
+             *, q_offset=0, kv_prefix: Optional[tuple] = None,
+             return_kv: bool = False):
+    """Naive (non-absorbed) MLA for train/prefill: up-project K/V per head."""
+    m = cfg.mla
+    q_nope, q_rope = _mla_q(cfg, p, x, positions)
+    c_kv, k_rope = _mla_latent(cfg, p, x, positions)
+    if kv_prefix is not None:
+        pc, pr, _plen = kv_prefix
+        c_kv_all = jnp.concatenate([pc, c_kv], axis=1)
+        k_rope_all = jnp.concatenate([pr, k_rope], axis=1)
+    else:
+        c_kv_all, k_rope_all = c_kv, k_rope
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv_all, p["wuk"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv_all, p["wuv"])
+    nh = k_nope.shape[2]
+    k_rope_b = jnp.broadcast_to(k_rope_all[:, :, None, :],
+                                k_rope_all.shape[:2] + (nh, m.qk_rope_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    out = ops.flash_attention(q, k, v, causal=True, logit_scale=scale,
+                              q_offset=q_offset)
+    out = shard(out, "batch", "act_seq", "act_heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    y = shard(y, "batch", "act_seq", "embed")
+    if return_kv:
+        return y, (c_kv, k_rope)
+    return y
+
+
+def mla_decode(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
+               cache: dict, cache_len: jax.Array):
+    """Absorbed decode: scores and context computed in the 512-d latent."""
+    m = cfg.mla
+    q_nope, q_rope = _mla_q(cfg, p, x, positions)       # (B,1,H,*)
+    c_new, r_new = _mla_latent(cfg, p, x, positions)     # (B,1,rank/rope)
+    ckv = _write_at(cache["c_kv"], c_new[:, 0], cache_len)
+    krp = _write_at(cache["k_rope"], r_new[:, 0], cache_len)
+    ckv = shard(ckv, "batch", "kv_seq", None)
+    # absorb W_uk into q: q_lat (B,H,rank)
+    q_lat = jnp.einsum("bhk,rhk->bhr", q_nope[:, 0], p["wuk"])
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    scores = (jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32),
+                         ckv.astype(jnp.float32))
+              + jnp.einsum("bhk,bsk->bhs", q_rope[:, 0].astype(jnp.float32),
+                           krp.astype(jnp.float32))) * scale
+    s_max = ckv.shape[1]
+    valid = jnp.arange(s_max)[None, None, :] < (cache_len + 1)[:, None, None]
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx_lat = jnp.einsum("bhs,bsr->bhr", probs, ckv.astype(jnp.float32))
+    out = jnp.einsum("bhr,rhk->bhk", ctx_lat.astype(x.dtype), p["wuv"])
+    out = shard(out, "batch", "act_heads", None)
+    y = jnp.einsum("bhk,hkd->bd", out, p["wo"])[:, None, :]
+    y = shard(y, "batch", "act_seq", "embed")
+    return y, {"c_kv": ckv, "k_rope": krp}
+
+
+def mla_init_cache(cfg: ModelConfig, tp: int, batch: int, max_len: int) -> dict:
+    m = cfg.mla
+    dt = jnp.dtype(cfg.dtype)
+    return {"c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dt),
+            "k_rope": jnp.zeros((batch, max_len, m.qk_rope_dim), dt)}
+
+
+def mla_cache_axes() -> dict:
+    return {"c_kv": ("batch", "kv_seq", None),
+            "k_rope": ("batch", "kv_seq", None)}

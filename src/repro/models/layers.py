@@ -1,0 +1,115 @@
+"""Shared layer primitives: RMSNorm, RoPE, activation, TP-aware projections."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+
+
+def rmsnorm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * weight
+
+
+def silu(x: jax.Array) -> jax.Array:
+    return x * jax.nn.sigmoid(x)
+
+
+def softplus(x: jax.Array) -> jax.Array:
+    return jax.nn.softplus(x)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim/2,) inverse frequencies, f32."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def _rope_rotate(x: jax.Array, angles: jax.Array) -> jax.Array:
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def _angles(positions: jax.Array, seq: int, hd: int, theta: float) -> jax.Array:
+    """positions: (S,) or (B, S) -> angles (S, hd/2) or (B, S, hd/2)."""
+    freqs = rope_freqs(hd, theta)
+    return positions.astype(jnp.float32)[..., None] * freqs
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D) — explicit head axis.  positions: (S,) or (B, S)."""
+    assert x.ndim == 4, x.shape
+    ang = _angles(positions, x.shape[1], x.shape[-1], theta)
+    ang = ang[..., None, :]                 # broadcast over heads
+    if ang.ndim == 3:                       # positions were (S,)
+        ang = ang[None]
+    return _rope_rotate(x, ang)
+
+
+def apply_rope_nohead(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, D) — no head axis (MLA decoupled key)."""
+    assert x.ndim == 3, x.shape
+    ang = _angles(positions, x.shape[1], x.shape[-1], theta)
+    if ang.ndim == 2:
+        ang = ang[None]
+    return _rope_rotate(x, ang)
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (mamba / xlstm) — supports streaming decode
+# ---------------------------------------------------------------------------
+def causal_conv1d(x: jax.Array, w: jax.Array, b: Optional[jax.Array]) -> jax.Array:
+    """x: (B, S, C); w: (C, K) depthwise taps; left-pads with zeros."""
+    k = w.shape[-1]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # sum_k w[:, k] * x[t - (K-1) + k]
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + pad[:, i : i + x.shape[1], :] * w[:, i]
+    if b is not None:
+        out = out + b
+    return out
+
+
+def causal_conv1d_step(x_t: jax.Array, conv_state: jax.Array, w: jax.Array,
+                       b: Optional[jax.Array]) -> tuple[jax.Array, jax.Array]:
+    """One decode step.  x_t: (B, C); conv_state: (B, K-1, C) past inputs."""
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,K,C)
+    out = jnp.einsum("bkc,ck->bc", window, w)
+    if b is not None:
+        out = out + b
+    return out, window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# losses / heads
+# ---------------------------------------------------------------------------
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token-level xent.  logits (..., V) f32-upcast; labels (...) int."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+__all__ = [
+    "rmsnorm", "silu", "softplus", "rope_freqs", "apply_rope",
+    "apply_rope_nohead", "causal_conv1d", "causal_conv1d_step",
+    "cross_entropy", "shard",
+]

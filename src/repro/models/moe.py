@@ -1,0 +1,143 @@
+"""Mixture-of-Experts FFN: GShard-style einsum dispatch with capacity.
+
+Baseline (paper-era standard, GSPMD-shardable): top-k routing, tokens grouped
+into dispatch groups of ``dispatch_group`` tokens, one-hot dispatch/combine
+tensors of shape (G, S, E, C).  Experts are sharded over the ``model`` mesh
+axis (expert parallelism); XLA inserts the all-to-alls.
+
+The dispatch einsums carry real FLOPs (G·S·E·C·d) — this is *measured
+honestly* in the roofline and is a hillclimb target (see EXPERIMENTS.md §Perf:
+the optimized path uses a dense-gate matmul formulation that removes the C
+dimension from the contraction).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.layers import shard, silu
+from repro.models.param import ParamDef
+
+
+def moe_defs(cfg: ModelConfig, *, dense_residual: bool = False) -> dict:
+    m = cfg.moe
+    assert m is not None
+    d, dt = cfg.d_model, cfg.dtype
+    defs = {
+        "router": ParamDef((d, m.num_experts), ("w_embed", "experts"),
+                           init="small", dtype="float32"),
+        "w_gate": ParamDef((m.num_experts, d, m.expert_d_ff),
+                           ("experts", "w_embed", "ff"), dtype=dt, fan_in_axes=(1,)),
+        "w_up": ParamDef((m.num_experts, d, m.expert_d_ff),
+                         ("experts", "w_embed", "ff"), dtype=dt, fan_in_axes=(1,)),
+        "w_down": ParamDef((m.num_experts, m.expert_d_ff, d),
+                           ("experts", "ff", "w_embed"), dtype=dt, fan_in_axes=(1,)),
+    }
+    if m.num_shared_experts:
+        defs["shared"] = _ffn_defs(d, m.shared_d_ff, dt)
+    if dense_residual:
+        defs["dense"] = _ffn_defs(d, cfg.d_ff, dt)
+    return defs
+
+
+def _ffn_defs(d: int, d_ff: int, dt: str, gated: bool = True) -> dict:
+    defs = {
+        "w_up": ParamDef((d, d_ff), ("w_embed", "ff"), dtype=dt),
+        "w_down": ParamDef((d_ff, d), ("ff", "w_embed"), dtype=dt),
+    }
+    if gated:
+        defs["w_gate"] = ParamDef((d, d_ff), ("w_embed", "ff"), dtype=dt)
+    return defs
+
+
+def dense_ffn(p: dict, x: jax.Array) -> jax.Array:
+    """SwiGLU when w_gate present, else plain GELU MLP.  x: (..., D)."""
+    u = jnp.einsum("...d,df->...f", x, p["w_up"])
+    if "w_gate" in p:
+        g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+        h = silu(g) * u
+    else:
+        h = jax.nn.gelu(u)
+    h = shard(h, *(("batch",) + (None,) * (x.ndim - 2) + ("act_ff",)))
+    y = jnp.einsum("...f,fd->...d", h, p["w_down"])
+    return shard(y, *(("batch",) + (None,) * (x.ndim - 2) + ("embed",)))
+
+
+def _capacity(m: MoEConfig, group_size: int) -> int:
+    c = math.ceil(group_size * m.top_k / m.num_experts * m.capacity_factor)
+    return max(4, c)
+
+
+def route_topk(m: MoEConfig, router_logits: jax.Array
+               ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """router_logits: (G, S, E) f32.  Returns (gates (G,S,K), idx (G,S,K),
+    aux_loss scalar) with gates renormalized over the chosen k."""
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    gates, idx = jax.lax.top_k(probs, m.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss: E * sum_e f_e * p_e
+    e = m.num_experts
+    me = probs.mean(axis=(0, 1))                                  # (E,)
+    one_hot_top1 = jax.nn.one_hot(idx[..., 0], e, dtype=jnp.float32)
+    ce = one_hot_top1.mean(axis=(0, 1))
+    aux = e * jnp.sum(me * ce)
+    return gates, idx, aux
+
+
+def moe_ffn(cfg: ModelConfig, p: dict, x: jax.Array, *,
+            dense_residual: bool = False) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (y, aux_loss).  GShard einsum dispatch."""
+    import os
+    m = cfg.moe
+    b, s, d = x.shape
+    tokens = x.reshape(b * s, d)
+    t = tokens.shape[0]
+    # §Perf HC2 knob: dispatch-group size (capacity C scales with it)
+    sg = min(int(os.environ.get("REPRO_MOE_GROUP", m.dispatch_group)), t)
+    # pad to a multiple of the group size
+    g = math.ceil(t / sg)
+    pad = g * sg - t
+    if pad:
+        tokens = jnp.pad(tokens, ((0, pad), (0, 0)))
+    grouped = tokens.reshape(g, sg, d)
+    grouped = shard(grouped, "batch", None, "embed")
+
+    logits = jnp.einsum("gsd,de->gse", grouped.astype(jnp.float32), p["router"])
+    gates, idx, aux = route_topk(m, logits)
+
+    c = _capacity(m, sg)
+    e = m.num_experts
+    # position of each (token, k) within its expert queue; earlier k has
+    # priority (GShard).  mask_k: (G,S,E) one-hot of choice k.
+    dispatch = jnp.zeros((g, sg, e, c), dtype=jnp.bfloat16)
+    combine = jnp.zeros((g, sg, e, c), dtype=jnp.float32)
+    prev_counts = jnp.zeros((g, 1, e), jnp.int32)
+    for k in range(m.top_k):
+        mask = jax.nn.one_hot(idx[..., k], e, dtype=jnp.int32)     # (G,S,E)
+        pos = jnp.cumsum(mask, axis=1) - mask + prev_counts        # (G,S,E)
+        keep = (pos < c) & (mask > 0)
+        pos_oh = jax.nn.one_hot(pos, c, dtype=jnp.bfloat16) * keep[..., None]
+        dispatch = dispatch + pos_oh
+        combine = combine + pos_oh.astype(jnp.float32) * gates[..., k][..., None, None]
+        prev_counts = prev_counts + mask.sum(axis=1, keepdims=True)
+
+    # dispatch: (G,S,E,C) x (G,S,D) -> (E,G,C,D), experts sharded on model
+    expert_in = jnp.einsum("gsec,gsd->egcd", dispatch,
+                           grouped.astype(jnp.bfloat16))
+    expert_in = shard(expert_in, "act_experts", "batch", None, "embed")
+    h = silu(jnp.einsum("egcd,edf->egcf", expert_in, p["w_gate"])) * \
+        jnp.einsum("egcd,edf->egcf", expert_in, p["w_up"])
+    expert_out = jnp.einsum("egcf,efd->egcd", h, p["w_down"])
+    expert_out = shard(expert_out, "act_experts", "batch", None, "embed")
+    y = jnp.einsum("gsec,egcd->gsd", combine.astype(jnp.bfloat16), expert_out)
+    y = y.reshape(g * sg, d)[:t].reshape(b, s, d).astype(x.dtype)
+
+    if m.num_shared_experts:
+        y = y + dense_ffn(p["shared"], x)
+    if dense_residual:
+        y = y + dense_ffn(p["dense"], x)
+    return shard(y, "batch", "act_seq", "embed"), aux

@@ -1,0 +1,117 @@
+"""Mamba-1 selective-SSM block (Jamba's sequence mixer).
+
+TP: the inner dim d_in = expand·d_model is sharded over the model axis; the
+SSM scan is elementwise across channels so it shards cleanly.  dt/B/C are
+small (rank + 2N per token) and replicated.  out_proj is row-parallel (AR).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MambaConfig, ModelConfig
+from repro.kernels import ops
+from repro.kernels.ref import ssm_step_ref
+from repro.models.layers import causal_conv1d, causal_conv1d_step, shard, silu, softplus
+from repro.models.param import ParamDef
+
+
+def _dims(cfg: ModelConfig) -> tuple[int, int, int]:
+    mc = cfg.mamba or MambaConfig()
+    d_in = mc.expand * cfg.d_model
+    dt_rank = mc.dt_rank or -(-cfg.d_model // 16)
+    return d_in, dt_rank, mc.d_state
+
+
+def mamba_defs(cfg: ModelConfig, tp: int) -> dict:
+    mc = cfg.mamba or MambaConfig()
+    d, dt = cfg.d_model, cfg.dtype
+    d_in, dt_rank, n = _dims(cfg)
+    return {
+        "w_in": ParamDef((d, 2 * d_in), ("w_embed", "inner"), dtype=dt),
+        "conv_w": ParamDef((d_in, mc.d_conv), ("inner", None), dtype=dt),
+        "conv_b": ParamDef((d_in,), ("inner",), init="zeros", dtype=dt),
+        "w_x": ParamDef((d_in, dt_rank + 2 * n), ("inner", None), dtype=dt),
+        "w_dt": ParamDef((dt_rank, d_in), (None, "inner"), dtype=dt),
+        "dt_bias": ParamDef((d_in,), ("inner",), init="dt_bias", dtype="float32"),
+        "a_log": ParamDef((d_in, n), ("inner", "state"), init="a_log", dtype="float32"),
+        "d_skip": ParamDef((d_in,), ("inner",), init="ones", dtype="float32"),
+        "w_out": ParamDef((d_in, d), ("inner", "w_embed"), dtype=dt),
+    }
+
+
+def _pre(cfg: ModelConfig, p: dict, x: jax.Array):
+    """Shared projections.  x: (B, S, D) -> (xz split, conv'd xs, dt, b, c)."""
+    d_in, dt_rank, n = _dims(cfg)
+    xz = jnp.einsum("bsd,dk->bsk", x, p["w_in"])
+    xz = shard(xz, "batch", "act_seq", "act_inner")
+    xs, z = jnp.split(xz, 2, axis=-1)
+    return xs, z
+
+
+def _ssm_params(cfg: ModelConfig, p: dict, xc: jax.Array):
+    d_in, dt_rank, n = _dims(cfg)
+    proj = jnp.einsum("bsk,kr->bsr", xc, p["w_x"])
+    dt_low, b, c = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = softplus(jnp.einsum("bsr,rk->bsk", dt_low, p["w_dt"]).astype(jnp.float32)
+                  + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    return dt, a, b, c
+
+
+def mamba_full(cfg: ModelConfig, p: dict, x: jax.Array,
+               initial: Optional[dict] = None, return_state: bool = False):
+    """Train/prefill.  x: (B, S, D)."""
+    mc = cfg.mamba or MambaConfig()
+    xs, z = _pre(cfg, p, x)
+    if initial is not None:
+        # chunked prefill: prepend conv history
+        hist = initial["conv"]                        # (B, K-1, d_in)
+        xs_ext = jnp.concatenate([hist, xs], axis=1)
+        xc = causal_conv1d(xs_ext, p["conv_w"], p["conv_b"])[:, hist.shape[1]:]
+        h0 = initial["ssm"]
+    else:
+        xc = causal_conv1d(xs, p["conv_w"], p["conv_b"])
+        h0 = None
+    xc = silu(xc)
+    dt, a, b, c = _ssm_params(cfg, p, xc)
+    y, h_final = ops.ssm_scan(xc, dt, a, b, c, p["d_skip"], h0)
+    y = y * silu(z)
+    y = shard(y, "batch", "act_seq", "act_inner")
+    out = jnp.einsum("bsk,kd->bsd", y, p["w_out"])
+    out = shard(out, "batch", "act_seq", "embed")
+    if return_state:
+        conv_state = xs[:, -(mc.d_conv - 1):, :] if xs.shape[1] >= mc.d_conv - 1 \
+            else jnp.pad(xs, ((0, 0), (mc.d_conv - 1 - xs.shape[1], 0), (0, 0)))
+        return out, {"conv": conv_state, "ssm": h_final}
+    return out
+
+
+def mamba_decode(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict):
+    """x: (B, 1, D); cache = {conv (B,K-1,d_in), ssm (B,d_in,N)}."""
+    xs, z = _pre(cfg, p, x)
+    xc, conv_state = causal_conv1d_step(xs[:, 0], cache["conv"], p["conv_w"],
+                                        p["conv_b"])
+    xc = silu(xc)[:, None, :]
+    dt, a, b, c = _ssm_params(cfg, p, xc)
+    y, h = ssm_step_ref(xc[:, 0], dt[:, 0], a, b[:, 0], c[:, 0], p["d_skip"],
+                        cache["ssm"])
+    y = y * silu(z[:, 0])
+    y = shard(y, "batch", "act_inner")
+    out = jnp.einsum("bk,kd->bd", y, p["w_out"])[:, None, :]
+    return shard(out, "batch", "act_seq", "embed"), {"conv": conv_state, "ssm": h}
+
+
+def mamba_init_cache(cfg: ModelConfig, tp: int, batch: int) -> dict:
+    mc = cfg.mamba or MambaConfig()
+    d_in, _, n = _dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    return {"conv": jnp.zeros((batch, mc.d_conv - 1, d_in), dt),
+            "ssm": jnp.zeros((batch, d_in, n), jnp.float32)}
+
+
+def mamba_cache_axes() -> dict:
+    return {"conv": ("batch", None, "act_inner"),
+            "ssm": ("batch", "act_inner", None)}

@@ -1,0 +1,366 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+[arXiv:2405.04517].  TP strategy (DESIGN.md §4): the mLSTM value dim is
+sharded over the model axis (its matrix memory C is (dqk × dv) per head —
+sharding dv shards both the state and the einsums); q/k are computed
+replicated.  sLSTM state is tiny (vectors of d_model) — its recurrence runs
+replicated and only the post-FFN projections are TP-sharded.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, XLSTMConfig
+from repro.kernels.ref import mlstm_chunk_ref, mlstm_step_ref
+from repro.models.layers import (causal_conv1d, causal_conv1d_step, rmsnorm,
+                                 shard, silu)
+from repro.models.param import ParamDef
+
+
+def _xc(cfg: ModelConfig) -> XLSTMConfig:
+    return cfg.xlstm or XLSTMConfig()
+
+
+def _mlstm_dims(cfg: ModelConfig) -> tuple[int, int, int]:
+    d_in = int(_xc(cfg).proj_factor * cfg.d_model)
+    h = cfg.n_heads
+    return d_in, h, d_in // h
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def mlstm_defs(cfg: ModelConfig, tp: int) -> dict:
+    d, dt = cfg.d_model, cfg.dtype
+    xc = _xc(cfg)
+    d_in, h, dh = _mlstm_dims(cfg)
+    return {
+        "w_up": ParamDef((d, 2 * d_in), ("w_embed", "inner"), dtype=dt),
+        "conv_w": ParamDef((d_in, xc.conv_kernel), ("inner", None), dtype=dt),
+        "conv_b": ParamDef((d_in,), ("inner",), init="zeros", dtype=dt),
+        # per-head block-diagonal q/k/v (xLSTM paper; 1/H the dense params)
+        "w_q": ParamDef((h, dh, dh), (None, None, None), dtype=dt,
+                        fan_in_axes=(1,)),
+        "w_k": ParamDef((h, dh, dh), (None, None, None), dtype=dt,
+                        fan_in_axes=(1,)),
+        "w_v": ParamDef((h, dh, dh), (None, None, "dv"), dtype=dt,
+                        fan_in_axes=(1,)),
+        "w_i": ParamDef((d_in, h), (None, None), init="small", dtype="float32"),
+        "w_f": ParamDef((d_in, h), (None, None), init="small", dtype="float32"),
+        "b_i": ParamDef((h,), (None,), init="zeros", dtype="float32"),
+        "b_f": ParamDef((h,), (None,), init="ones", dtype="float32"),
+        "out_norm": ParamDef((d_in,), ("inner",), init="ones", dtype=dt),
+        "w_down": ParamDef((d_in, d), ("inner", "w_embed"), dtype=dt),
+    }
+
+
+def _mlstm_pre(cfg: ModelConfig, p: dict, x: jax.Array,
+               conv_hist: Optional[jax.Array] = None):
+    """x: (B,S,D) -> q,k,v (B,S,H,dh), gates (B,S,H), z, new conv tail."""
+    d_in, h, dh = _mlstm_dims(cfg)
+    xz = jnp.einsum("bsd,dk->bsk", x, p["w_up"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    if conv_hist is not None:
+        ext = jnp.concatenate([conv_hist, xs], axis=1)
+        xc = causal_conv1d(ext, p["conv_w"], p["conv_b"])[:, conv_hist.shape[1]:]
+    else:
+        xc = causal_conv1d(xs, p["conv_w"], p["conv_b"])
+    xc = silu(xc)
+    b, s, _ = x.shape
+    xch = xc.reshape(b, s, h, dh)
+    xsh = xs.reshape(b, s, h, dh)
+    q = jnp.einsum("bshk,hkj->bshj", xch, p["w_q"])
+    k = jnp.einsum("bshk,hkj->bshj", xch, p["w_k"])
+    v = jnp.einsum("bshk,hkj->bshj", xsh, p["w_v"])
+    v = shard(v, "batch", "act_seq", None, "act_dv")
+    ig = jnp.einsum("bsk,kh->bsh", xc.astype(jnp.float32), p["w_i"]) + p["b_i"]
+    fg = jax.nn.log_sigmoid(
+        jnp.einsum("bsk,kh->bsh", xc.astype(jnp.float32), p["w_f"]) + p["b_f"])
+    return q, k, v, ig, fg, z, xs
+
+
+def mlstm_chunkwise(q: jax.Array, k: jax.Array, v: jax.Array,
+                    i_gate: jax.Array, f_gate: jax.Array, *,
+                    chunk: int = 64, initial: Optional[tuple] = None):
+    """Chunkwise-parallel stabilized mLSTM — bit-compatible with the
+    sequential reference (kernels/ref.py:mlstm_chunk_ref; tested to 1e-4).
+
+    Why: the per-step scan carries the (dqk × dv) matrix memory through HBM
+    every token and saves every carry for backward (the xlstm train_4k cell
+    showed 1 TB/device temp).  The chunkwise form computes intra-chunk
+    interactions as causal (L×L) matmuls (MXU-shaped) and carries state only
+    per chunk: state traffic and saved residuals drop by the chunk length.
+
+    Derivation (per head; b_j = Σ_{k≤j} f_k inclusive, m_0/C_0/n_0 carried):
+      m_j   = b_j + G_j,          G_j = max(m_0, cummax_k≤j(i_k - b_k))
+      num_j = Σ_{k≤j} e^{i_k-b_k-G_j}(q_j·k_k)v_k + e^{m_0-G_j}(q_j·C_0)
+      n_j   = Σ_{k≤j} e^{i_k-b_k-G_j}k_k        + e^{m_0-G_j}n_0
+      y_j   = num_j / max(|q_j·n_j|, e^{-m_j})
+      C_L   = Σ_k e^{i_k-b_k-G_L}k_k v_kᵀ + e^{m_0-G_L}C_0   (chunk end)
+    All exponents are ≤ 0, so everything is overflow-safe.
+    """
+    bsz, s, h, dqk = q.shape
+    dv = v.shape[-1]
+    scale = dqk ** -0.5
+    if initial is None:
+        c0 = jnp.zeros((bsz, h, dqk, dv), jnp.float32)
+        n0 = jnp.zeros((bsz, h, dqk), jnp.float32)
+        m0 = jnp.full((bsz, h), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = initial
+        m0 = jnp.maximum(m0, -1e30)          # ref uses -inf; keep finite
+
+    l = min(chunk, s)
+    pad = (-s) % l
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        i_gate = jnp.pad(i_gate, ((0, 0), (0, pad), (0, 0)),
+                         constant_values=-1e30)     # no input on padding
+        f_gate = jnp.pad(f_gate, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // l
+
+    def chk(x_, d):
+        return x_.reshape(bsz, nc, l, h, d).transpose(1, 0, 3, 2, 4)
+
+    qs = chk(q.astype(jnp.float32) * scale, dqk)     # (nc,B,H,L,dqk)
+    ks = chk(k.astype(jnp.float32), dqk)
+    vs = chk(v.astype(jnp.float32), dv)
+    ig = i_gate.astype(jnp.float32).reshape(bsz, nc, l, h).transpose(1, 0, 3, 2)
+    fg = f_gate.astype(jnp.float32).reshape(bsz, nc, l, h).transpose(1, 0, 3, 2)
+
+    def body(carry, inp):
+        c, n, m = carry                               # (B,H,dqk,dv) ...
+        qc, kc, vc, ic, fc = inp                      # (B,H,L,*)
+        b = jnp.cumsum(fc, axis=-1)                   # (B,H,L) inclusive
+        a = ic - b                                    # i_k - b_k
+        g = jnp.maximum(m[..., None], jax.lax.cummax(a, axis=2))  # (B,H,L)
+        m_j = b + g
+        w = jnp.exp(a[..., None, :] - g[..., :, None])            # (B,H,L_j,L_k)
+        mask = jnp.tril(jnp.ones((l, l), bool))
+        w = jnp.where(mask, w, 0.0)
+        scores = jnp.einsum("bhjd,bhkd->bhjk", qc, kc)
+        num = jnp.einsum("bhjk,bhkv->bhjv", scores * w, vc) \
+            + jnp.exp(m[..., None] - g)[..., None] * \
+            jnp.einsum("bhjd,bhdv->bhjv", qc, c)
+        nvec = jnp.einsum("bhjk,bhkd->bhjd", w, kc) \
+            + jnp.exp(m[..., None] - g)[..., None] * n[..., None, :]
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhjd,bhjd->bhj", qc, nvec)),
+                          jnp.exp(-m_j))[..., None]
+        y = num / den                                  # (B,H,L,dv)
+        # chunk-end state
+        g_l = g[..., -1]
+        w_l = jnp.exp(a - g_l[..., None])              # (B,H,L)
+        c = jnp.exp(m - g_l)[..., None, None] * c + \
+            jnp.einsum("bhk,bhkd,bhkv->bhdv", w_l, kc, vc)
+        n = jnp.exp(m - g_l)[..., None] * n + \
+            jnp.einsum("bhk,bhkd->bhd", w_l, kc)
+        return (c, n, b[..., -1] + g_l), y
+
+    (c_f, n_f, m_f), ys = jax.lax.scan(body, (c0, n0, m0), (qs, ks, vs, ig, fg))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(bsz, nc * l, h, dv)[:, :s]
+    return y.astype(q.dtype), (c_f, n_f, m_f)
+
+
+# mLSTM sequence-mix implementation: "scan" (faithful straightforward
+# baseline — per-step recurrence) or "chunkwise" (the §Perf optimization:
+# MXU-shaped intra-chunk matmuls, per-chunk state carry).  Env override for
+# the dry-run A/B; see EXPERIMENTS.md §Perf HC1.
+def _mlstm_impl() -> str:
+    import os
+    return os.environ.get("REPRO_MLSTM", "scan")
+
+
+def mlstm_full(cfg: ModelConfig, p: dict, x: jax.Array,
+               initial: Optional[dict] = None, return_state: bool = False):
+    xc = _xc(cfg)
+    d_in, h, dh = _mlstm_dims(cfg)
+    hist = initial["conv"] if initial is not None else None
+    st0 = (initial["c"], initial["n"], initial["m"]) if initial is not None else None
+    q, k, v, ig, fg, z, xs = _mlstm_pre(cfg, p, x, hist)
+    if _mlstm_impl() == "chunkwise" and x.shape[1] >= 8:
+        y, state = mlstm_chunkwise(q, k, v, ig, fg, initial=st0)
+    else:
+        y, state = mlstm_chunk_ref(q, k, v, ig, fg, initial=st0)
+    b, s = x.shape[0], x.shape[1]
+    y = y.reshape(b, s, d_in)
+    y = rmsnorm(y, p["out_norm"], cfg.norm_eps) * silu(z)
+    y = shard(y, "batch", "act_seq", "act_inner")
+    out = jnp.einsum("bsk,kd->bsd", y, p["w_down"])
+    out = shard(out, "batch", "act_seq", "embed")
+    if return_state:
+        kk = xc.conv_kernel - 1
+        conv_state = xs[:, -kk:, :] if xs.shape[1] >= kk \
+            else jnp.pad(xs, ((0, 0), (kk - xs.shape[1], 0), (0, 0)))
+        c_f, n_f, m_f = state
+        return out, {"conv": conv_state, "c": c_f, "n": n_f, "m": m_f}
+    return out
+
+
+def mlstm_decode(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict):
+    d_in, h, dh = _mlstm_dims(cfg)
+    xz = jnp.einsum("bd,dk->bk", x[:, 0], p["w_up"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xc_t, conv_state = causal_conv1d_step(xs, cache["conv"], p["conv_w"],
+                                          p["conv_b"])
+    xc_t = silu(xc_t)
+    b = x.shape[0]
+    xch = xc_t.reshape(b, h, dh)
+    xsh = xs.reshape(b, h, dh)
+    q = jnp.einsum("bhk,hkj->bhj", xch, p["w_q"])
+    k = jnp.einsum("bhk,hkj->bhj", xch, p["w_k"])
+    v = jnp.einsum("bhk,hkj->bhj", xsh, p["w_v"])
+    ig = jnp.einsum("bk,kh->bh", xc_t.astype(jnp.float32), p["w_i"]) + p["b_i"]
+    fg = jax.nn.log_sigmoid(
+        jnp.einsum("bk,kh->bh", xc_t.astype(jnp.float32), p["w_f"]) + p["b_f"])
+    y, (c, n, m) = mlstm_step_ref(q, k, v, ig, fg,
+                                  (cache["c"], cache["n"], cache["m"]))
+    y = y.reshape(b, d_in)
+    y = rmsnorm(y, p["out_norm"], cfg.norm_eps) * silu(z)
+    out = jnp.einsum("bk,kd->bd", y, p["w_down"])[:, None, :]
+    out = shard(out, "batch", "act_seq", "embed")
+    return out, {"conv": conv_state, "c": c, "n": n, "m": m}
+
+
+def mlstm_init_cache(cfg: ModelConfig, tp: int, batch: int) -> dict:
+    xc = _xc(cfg)
+    d_in, h, dh = _mlstm_dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    return {"conv": jnp.zeros((batch, xc.conv_kernel - 1, d_in), dt),
+            "c": jnp.zeros((batch, h, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, h, dh), jnp.float32),
+            "m": jnp.full((batch, h), -1e30, jnp.float32)}
+
+
+def mlstm_cache_axes() -> dict:
+    return {"conv": ("batch", None, "act_inner"),
+            "c": ("batch", None, None, "act_dv"),
+            "n": ("batch", None, None),
+            "m": ("batch", None)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_defs(cfg: ModelConfig, tp: int) -> dict:
+    d, dt = cfg.d_model, cfg.dtype
+    xc = _xc(cfg)
+    h = cfg.n_heads
+    dh = d // h
+    f_d = 2 * d                                  # post-FFN width (GLU)
+    return {
+        "conv_w": ParamDef((d, xc.slstm_conv_kernel), ("w_embed", None), dtype=dt),
+        "conv_b": ParamDef((d,), ("w_embed",), init="zeros", dtype=dt),
+        "w_gates": ParamDef((d, 4 * d), ("w_embed", None), dtype=dt),
+        "r_gates": ParamDef((h, dh, 4 * dh), (None, None, None), dtype=dt,
+                            fan_in_axes=(1,)),
+        "b_gates": ParamDef((4 * d,), (None,), init="zeros", dtype="float32"),
+        "out_norm": ParamDef((d,), ("w_embed",), init="ones", dtype=dt),
+        "w_ffn_up": ParamDef((d, f_d), ("w_embed", "ff"), dtype=dt),
+        "w_ffn_down": ParamDef((f_d // 2, d), ("ff", "w_embed"), dtype=dt),
+    }
+
+
+def _slstm_scan(cfg: ModelConfig, p: dict, xg: jax.Array, state: tuple):
+    """xg: (B, S, 4D) gate preactivations (input part).  Sequential scan with
+    block-diagonal recurrence.  Stabilized per xLSTM appendix."""
+    b, s, _ = xg.shape
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+
+    def step(carry, g_t):
+        c, n, hprev, m = carry                   # (B,D) each
+        hh = hprev.reshape(b, h, dh)
+        rec = jnp.einsum("bhd,hdk->bhk", hh, p["r_gates"]).reshape(b, 4 * d)
+        pre = (g_t + rec).astype(jnp.float32) + p["b_gates"]
+        i_p, f_p, z_p, o_p = jnp.split(pre, 4, axis=-1)
+        m_new = jnp.maximum(f_p + m, i_p)
+        i = jnp.exp(i_p - m_new)
+        f = jnp.exp(f_p + m - m_new)
+        z = jnp.tanh(z_p)
+        o = jax.nn.sigmoid(o_p)
+        c = f * c + i * z
+        n = f * n + i
+        h_new = (o * c / jnp.maximum(n, 1e-6)).astype(xg.dtype)
+        return (c, n, h_new, m_new), h_new
+
+    carry, ys = jax.lax.scan(step, state, jnp.moveaxis(xg, 1, 0))
+    return jnp.moveaxis(ys, 0, 1), carry
+
+
+def slstm_full(cfg: ModelConfig, p: dict, x: jax.Array,
+               initial: Optional[dict] = None, return_state: bool = False):
+    xc = _xc(cfg)
+    if initial is not None:
+        ext = jnp.concatenate([initial["conv"], x], axis=1)
+        xconv = causal_conv1d(ext, p["conv_w"], p["conv_b"])[:, initial["conv"].shape[1]:]
+        state = (initial["c"], initial["n"], initial["h"], initial["m"])
+    else:
+        xconv = causal_conv1d(x, p["conv_w"], p["conv_b"])
+        b, d = x.shape[0], cfg.d_model
+        state = (jnp.zeros((b, d), jnp.float32), jnp.zeros((b, d), jnp.float32),
+                 jnp.zeros((b, d), x.dtype), jnp.full((b, d), -1e30, jnp.float32))
+    xconv = silu(xconv)
+    # i,f gates see the conv features; z,o see the raw input (xLSTM paper)
+    gi = jnp.einsum("bsd,dk->bsk", xconv, p["w_gates"][:, : 2 * cfg.d_model])
+    gz = jnp.einsum("bsd,dk->bsk", x, p["w_gates"][:, 2 * cfg.d_model:])
+    xg = jnp.concatenate([gi, gz], axis=-1)
+    ys, carry = _slstm_scan(cfg, p, xg, state)
+    y = rmsnorm(ys, p["out_norm"], cfg.norm_eps)
+    # post up/down GLU FFN
+    up = jnp.einsum("bsd,df->bsf", y, p["w_ffn_up"])
+    u, g = jnp.split(up, 2, axis=-1)
+    yf = shard(u * silu(g), "batch", "act_seq", "act_ff")
+    out = jnp.einsum("bsf,fd->bsd", yf, p["w_ffn_down"])
+    out = shard(out, "batch", "act_seq", "embed")
+    if return_state:
+        kk = xc.slstm_conv_kernel - 1
+        conv_state = x[:, -kk:, :] if x.shape[1] >= kk \
+            else jnp.pad(x, ((0, 0), (kk - x.shape[1], 0), (0, 0)))
+        c, n, hs, m = carry
+        return out, {"conv": conv_state, "c": c, "n": n, "h": hs, "m": m}
+    return out
+
+
+def slstm_decode(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict):
+    out, st = _slstm_step_impl(cfg, p, x, cache)
+    return out, st
+
+
+def _slstm_step_impl(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict):
+    xt = x[:, 0]
+    xc_t, conv_state = causal_conv1d_step(xt, cache["conv"], p["conv_w"],
+                                          p["conv_b"])
+    xc_t = silu(xc_t)
+    gi = jnp.einsum("bd,dk->bk", xc_t, p["w_gates"][:, : 2 * cfg.d_model])
+    gz = jnp.einsum("bd,dk->bk", xt, p["w_gates"][:, 2 * cfg.d_model:])
+    xg = jnp.concatenate([gi, gz], axis=-1)[:, None, :]
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    ys, (c, n, hs, m) = _slstm_scan(cfg, p, xg, state)
+    y = rmsnorm(ys[:, 0], p["out_norm"], cfg.norm_eps)
+    up = jnp.einsum("bd,df->bf", y, p["w_ffn_up"])
+    u, g = jnp.split(up, 2, axis=-1)
+    out = jnp.einsum("bf,fd->bd", u * silu(g), p["w_ffn_down"])[:, None, :]
+    return shard(out, "batch", "act_seq", "embed"), {
+        "conv": conv_state, "c": c, "n": n, "h": hs, "m": m}
+
+
+def slstm_init_cache(cfg: ModelConfig, tp: int, batch: int) -> dict:
+    xc = _xc(cfg)
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    return {"conv": jnp.zeros((batch, xc.slstm_conv_kernel - 1, d), dt),
+            "c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.zeros((batch, d), jnp.float32),
+            "h": jnp.zeros((batch, d), dt),
+            "m": jnp.full((batch, d), -1e30, jnp.float32)}
+
+
+def slstm_cache_axes() -> dict:
+    return {"conv": ("batch", None, "embed"), "c": ("batch", None),
+            "n": ("batch", None), "h": ("batch", None), "m": ("batch", None)}

@@ -1,0 +1,211 @@
+"""End-to-end serving engine: scheduler + paged KV + model execution.
+
+Slot-based execution: the decode path runs over a fixed-capacity slot array
+(static shapes — one compiled program; the paper's discrete-batching insight
+applied to the XLA compilation cache).  Prefill runs in chunks (chunked
+prefill, §4.2) whose KV states are scattered into the request's slot.
+
+Iteration order: decode first, then prefill.  The decode step executes over
+*all* slots (static shape); slots that are mid-prefill get a garbage write at
+their next position, which the subsequent prefill scatter overwrites — this
+mirrors NanoFlow's asynchronous top-level scheduling where batch formation
+for iteration i+1 happens before iteration i's results are inspected (§5.3).
+
+On TPU the per-iteration program is the NanoFlow pipeline (nano-batched,
+overlapped ops); on this CPU container the same engine logic drives the ref
+execution path, and the intra-device overlap is *modeled* by core/autosearch
+(benchmarks report both).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ATTN, ModelConfig
+from repro.models import model as model_lib
+from repro.serving import sampling
+from repro.serving.kvcache import PagedKVManager
+from repro.serving.request import Request
+from repro.serving.scheduler import BatchPlan, GlobalBatchScheduler
+
+
+@dataclasses.dataclass
+class EngineStats:
+    iterations: int = 0
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    wall_time: float = 0.0
+    dense_batch_hist: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def total_tokens(self) -> int:
+        return self.prefill_tokens + self.decode_tokens
+
+    @property
+    def throughput(self) -> float:
+        return self.total_tokens / self.wall_time if self.wall_time else 0.0
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 8,
+                 max_len: int = 512, page_size: int = 16,
+                 total_pages: Optional[int] = None,
+                 avg_decode_len: float = 64.0,
+                 discrete_sizes: tuple[int, ...] = (256, 128, 64, 32, 16, 8),
+                 seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.key = jax.random.PRNGKey(seed)
+
+        hd = cfg.resolved_head_dim
+        n_attn = max(sum(1 for s in cfg.layer_specs() if s.mixer == ATTN), 1)
+        kv_bytes = 2 * cfg.n_kv_heads * hd * 2 * n_attn
+        pages = total_pages or (max_slots * max_len // page_size)
+        self.kv = PagedKVManager(total_pages=pages, page_size=page_size,
+                                 bytes_per_token=kv_bytes,
+                                 avg_decode_len=avg_decode_len)
+        self.scheduler = GlobalBatchScheduler(
+            self.kv, discrete_sizes=discrete_sizes, max_active=max_slots)
+
+        # slot caches: model cache trees with leading batch = max_slots
+        self.cache = model_lib.init_cache(cfg, 1, max_slots, max_len)
+        self.cache_len = jnp.zeros((max_slots,), jnp.int32)
+        self.slot_free = list(range(max_slots))
+        self.stats = EngineStats()
+
+        self._decode_step = jax.jit(self._decode_impl, donate_argnums=(1,))
+
+    # ---- jitted decode over all slots (static shapes) -----------------------
+    def _decode_impl(self, params, cache, tokens, cache_len):
+        logits, new_cache = model_lib.forward_decode(
+            self.cfg, params, tokens, cache, cache_len)
+        next_tok = sampling.greedy(logits)
+        return next_tok, new_cache
+
+    # ---- public API ----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.scheduler.submit(req)
+
+    def run(self, max_iters: int = 10_000) -> list[Request]:
+        done: list[Request] = []
+        t0 = time.perf_counter()
+        for _ in range(max_iters):
+            plan = self.scheduler.plan()
+            if plan is None:
+                break
+            done += self.step(plan)
+        self.stats.wall_time += time.perf_counter() - t0
+        return done
+
+    def step(self, plan: BatchPlan) -> list[Request]:
+        now = time.perf_counter()
+        self.stats.iterations += 1
+        self.stats.dense_batch_hist[plan.dense_batch] = \
+            self.stats.dense_batch_hist.get(plan.dense_batch, 0) + 1
+        sampled: dict[int, int] = {}
+
+        # ---- batched decode over all slots (static shape) --------------------
+        decode_reqs = [r for r in plan.decode if r.slot >= 0]
+        if decode_reqs:
+            tokens = np.zeros((self.max_slots, 1), np.int32)
+            active = np.zeros((self.max_slots,), bool)
+            for r in decode_reqs:
+                tokens[r.slot, 0] = r.output[-1] if r.output else r.prompt[-1]
+                active[r.slot] = True
+            tok_in = jnp.asarray(tokens)
+            if self.cfg.frontend == "audio":
+                tok_in = jnp.repeat(tok_in[..., None], self.cfg.num_codebooks,
+                                    axis=-1)
+            next_tok, self.cache = self._decode_step(
+                self.params, self.cache, tok_in, self.cache_len)
+            self.cache_len = self.cache_len + jnp.asarray(active, jnp.int32)
+            nt = np.asarray(next_tok)
+            for r in decode_reqs:
+                t = nt[r.slot]
+                sampled[r.rid] = int(t) if np.ndim(t) == 0 else int(t.flat[0])
+            self.stats.decode_tokens += len(decode_reqs)
+
+        # ---- chunked prefill (overwrites any garbage decode writes) ----------
+        for chunk in plan.prefill:
+            r = chunk.req
+            if r.slot < 0:
+                assert self.slot_free, "scheduler admitted beyond slot capacity"
+                r.slot = self.slot_free.pop()
+            last_tok = self._prefill_to(r, chunk.offset + chunk.length)
+            self.stats.prefill_tokens += chunk.length
+            if chunk.offset + chunk.length == r.prompt_len:
+                sampled[r.rid] = last_tok
+
+        finished = self.scheduler.commit(plan, sampled, now)
+        for r in finished:
+            self._finalize(r)
+        return finished
+
+    # ---- internals -----------------------------------------------------------
+    def _prefill_to(self, r: Request, upto: int) -> int:
+        """(Re)compute the prompt prefix [0, upto) and scatter its states into
+        the request's slot.  Chunked prefill keeps the *dense batch* bounded
+        per iteration (the scheduler's job); the engine recomputes the prefix
+        per chunk — O(p²/chunk) FLOPs, correct for every mixer family.  The
+        TPU path instead threads kv_prefix/initial states (models/blocks.py
+        supports both); see DESIGN.md §7."""
+        cfg = self.cfg
+        toks = np.asarray(r.prompt[:upto], np.int32)[None]
+        tok_in = jnp.asarray(toks)
+        if cfg.frontend == "audio":
+            tok_in = jnp.repeat(tok_in[..., None], cfg.num_codebooks, axis=-1)
+        logits, _aux, states = model_lib.forward_full(
+            cfg, self.params, tok_in, return_states=True)
+        self._scatter_states(r.slot, states)
+        self.cache_len = self.cache_len.at[r.slot].set(upto)
+        last = np.asarray(logits[0, -1])
+        return int(last.argmax(-1)) if last.ndim == 1 else int(last.argmax(-1).flat[0])
+
+    def _scatter_states(self, slot: int, states) -> None:
+        for gi, (pattern, reps) in enumerate(self.cfg.layer_groups()):
+            for i, spec in enumerate(pattern):
+                st = states[gi][f"sub{i}"]
+                dst = self.cache[gi][f"sub{i}"]
+                if spec.mixer == ATTN:
+                    if self.cfg.mla is not None:
+                        ck, kr = st["kv"]
+                        dst["c_kv"] = _write_slot_seq(dst["c_kv"], ck, slot)
+                        dst["k_rope"] = _write_slot_seq(dst["k_rope"], kr, slot)
+                    else:
+                        k, v = st["kv"]
+                        dst["k"] = _write_slot_seq(dst["k"], k, slot)
+                        dst["v"] = _write_slot_seq(dst["v"], v, slot)
+                else:
+                    for name, val in st.items():
+                        dst[name] = _write_slot(dst[name], val, slot)
+
+    def _finalize(self, r: Request) -> None:
+        if r.slot >= 0:
+            self.slot_free.append(r.slot)
+            self.cache_len = self.cache_len.at[r.slot].set(0)
+            r.slot = -1
+        # strip the one post-EOS token (async EOS, §5.3)
+        if r.pending_eos and r.eos_id is not None and r.eos_id in r.output:
+            r.output = r.output[: r.output.index(r.eos_id) + 1]
+        # offload KV for multi-round reuse (byte-accurate accounting)
+        kv_elems = max(r.total_tokens * self.kv.bytes_per_token // 4, 1)
+        self.kv.offload(r.rid, np.zeros((kv_elems,), np.float32))
+
+
+def _write_slot_seq(cache: jax.Array, chunk: jax.Array, slot: int) -> jax.Array:
+    """cache: (L, B, S, ...); chunk: (L, 1, s, ...) -> rows [0, s) of slot."""
+    idx = (0, slot, 0) + (0,) * (cache.ndim - 3)
+    return jax.lax.dynamic_update_slice(cache, chunk.astype(cache.dtype), idx)
+
+
+def _write_slot(cache: jax.Array, state: jax.Array, slot: int) -> jax.Array:
+    """cache: (L, B, ...); state: (L, 1, ...) -> write slot row."""
+    idx = (0, slot) + (0,) * (cache.ndim - 2)
+    return jax.lax.dynamic_update_slice(cache, state.astype(cache.dtype), idx)

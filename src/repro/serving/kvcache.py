@@ -1,0 +1,161 @@
+"""Paged KV accounting + asynchronous host offload (paper §4.4 / §5.4).
+
+Pages are the unit of memory accounting, admission control, and offload:
+
+  * **Peak-memory estimation** — before admitting a request, simulate every
+    active request growing one token/iteration until its predicted end
+    (prompt + avg decode length) and take the max in-flight page count over
+    the finish-time sweep; admit only if the peak fits (paper §4.4).
+  * **Page aggregation before offload** — offloaded pages are first gathered
+    into one contiguous buffer (the paper's on-device rearrangement kernel;
+    Fig. 8 shows scattered D2H is ~an order of magnitude slower), then copied
+    host-side in one shot.  We model it with a real gather + a byte counter.
+  * **Host pool with LRU** — finished requests' KV lives on the host (the
+    paper's CPU/SSD tiers collapse into one host tier here), re-uploadable
+    for multi-round conversations; LRU-evicted beyond capacity.
+
+The compute path (engine.py) uses contiguous per-slot caches — on TPU the
+paged decode kernel (kernels/decode_attention.paged_decode_attention) reads
+through the page table directly; equivalence is covered by kernel tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Optional
+
+import numpy as np
+
+from repro.serving.request import Request
+
+
+@dataclasses.dataclass
+class KVStats:
+    device_pages_total: int
+    device_pages_used: int = 0
+    host_bytes: int = 0
+    offload_bytes: int = 0          # cumulative D2H traffic
+    upload_bytes: int = 0           # cumulative H2D traffic
+    aggregated_copies: int = 0
+    discarded_requests: int = 0
+
+
+class PagedKVManager:
+    def __init__(self, *, total_pages: int, page_size: int,
+                 bytes_per_token: int, avg_decode_len: float,
+                 host_capacity_bytes: int = 1 << 30):
+        self.page_size = page_size
+        self.bytes_per_token = bytes_per_token
+        self.avg_decode_len = avg_decode_len
+        self.host_capacity = host_capacity_bytes
+        self.free_pages = list(range(total_pages))
+        self.tables: dict[int, list[int]] = {}        # rid -> page ids
+        self.lengths: dict[int, int] = {}             # rid -> token count
+        self.host_pool: OrderedDict[int, tuple[int, bytes]] = OrderedDict()
+        self.stats = KVStats(device_pages_total=total_pages)
+
+    # ---- accounting -------------------------------------------------------
+    def pages_for(self, tokens: int) -> int:
+        return -(-tokens // self.page_size)
+
+    @property
+    def pages_used(self) -> int:
+        return sum(len(t) for t in self.tables.values())
+
+    @property
+    def pages_free(self) -> int:
+        return len(self.free_pages)
+
+    # ---- peak-memory admission (§4.4) --------------------------------------
+    def peak_pages(self, active: list[Request],
+                   candidate: Optional[Request] = None) -> int:
+        """Max page demand over the future, assuming one token/iteration and
+        avg-decode completion (requests free their pages when they finish)."""
+        reqs = list(active) + ([candidate] if candidate is not None else [])
+        if not reqs:
+            return 0
+        remaining = []
+        current = []
+        for r in reqs:
+            pred = r.predicted_final_len(self.avg_decode_len)
+            cur = max(r.total_tokens, min(r.prompt_len, pred))
+            remaining.append(max(pred - cur, 0))
+            current.append(cur)
+        order = sorted(range(len(reqs)), key=lambda i: remaining[i])
+        peak = 0
+        alive = set(range(len(reqs)))
+        t_prev = 0
+        for i in order:
+            t = remaining[i]
+            # just before request i finishes, everyone alive grew by t tokens
+            demand = sum(self.pages_for(current[j] + min(t, remaining[j]))
+                         for j in alive)
+            peak = max(peak, demand)
+            alive.discard(i)
+            t_prev = t
+        return peak
+
+    def can_admit(self, req: Request, active: list[Request]) -> bool:
+        return self.peak_pages(active, req) <= self.stats.device_pages_total
+
+    # ---- allocation --------------------------------------------------------
+    def allocate(self, rid: int, tokens: int) -> bool:
+        need = self.pages_for(tokens)
+        if need > len(self.free_pages):
+            return False
+        self.tables[rid] = [self.free_pages.pop() for _ in range(need)]
+        self.lengths[rid] = tokens
+        self._sync_used()
+        return True
+
+    def extend(self, rid: int, new_len: int) -> bool:
+        have = len(self.tables[rid])
+        need = self.pages_for(new_len)
+        extra = need - have
+        if extra > len(self.free_pages):
+            return False
+        for _ in range(extra):
+            self.tables[rid].append(self.free_pages.pop())
+        self.lengths[rid] = new_len
+        self._sync_used()
+        return True
+
+    def free(self, rid: int) -> None:
+        self.free_pages.extend(self.tables.pop(rid, []))
+        self.lengths.pop(rid, None)
+        self._sync_used()
+
+    def _sync_used(self):
+        self.stats.device_pages_used = self.pages_used
+
+    # ---- offload / upload (§5.4) -------------------------------------------
+    def offload(self, rid: int, kv_data: np.ndarray) -> None:
+        """Aggregate the request's scattered pages into one contiguous buffer
+        (page-aggregation kernel) and move it to the host pool (LRU)."""
+        tokens = self.lengths.get(rid, 0)
+        if tokens == 0:
+            return
+        contiguous = np.ascontiguousarray(kv_data)       # the aggregation
+        blob = contiguous.tobytes()
+        self.stats.aggregated_copies += 1
+        self.stats.offload_bytes += len(blob)
+        self.host_pool[rid] = (tokens, blob)
+        self.host_pool.move_to_end(rid)
+        self.stats.host_bytes += len(blob)
+        while self.stats.host_bytes > self.host_capacity and self.host_pool:
+            _, (_, evicted) = self.host_pool.popitem(last=False)   # LRU
+            self.stats.host_bytes -= len(evicted)
+        self.free(rid)
+
+    def upload(self, rid: int, dtype, shape) -> Optional[np.ndarray]:
+        """Multi-round re-activation: restore KV from host, re-allocating
+        device pages (page distribution kernel)."""
+        entry = self.host_pool.pop(rid, None)
+        if entry is None:
+            return None
+        tokens, blob = entry
+        self.stats.host_bytes -= len(blob)
+        self.stats.upload_bytes += len(blob)
+        if not self.allocate(rid, tokens):
+            return None
+        return np.frombuffer(blob, dtype=dtype).reshape(shape).copy()

@@ -1,0 +1,117 @@
+"""Multi-replica (pod-level) request router.
+
+At 1000+ nodes the serving fleet is many independent NanoFlow engines (the
+``pod`` mesh axis / separate pods).  This router implements the paper §4.1
+deployment box around them:
+
+  * **load-aware dispatch**: requests go to the replica with the lowest
+    estimated backlog (queued prefill tokens + active decode slots),
+  * **straggler routing**: replicas report EMA step times; slow replicas
+    receive proportionally less work (distributed/elastic.StragglerMitigator
+    policy applied to request streams),
+  * **failure handling**: a dead replica's queued (not yet prefilled)
+    requests are re-dispatched; in-flight requests are retried once.
+
+The router is engine-agnostic: it only needs ``submit`` + queue metrics, so
+the same logic drives real pods on a cluster.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.distributed.elastic import StragglerMitigator
+from repro.serving.request import Request, State
+
+
+@dataclasses.dataclass
+class ReplicaStats:
+    queued_tokens: int = 0
+    active_requests: int = 0
+    ema_step_s: float = 0.0
+    alive: bool = True
+
+
+class ReplicaHandle:
+    """Wraps one engine (or a remote pod endpoint)."""
+
+    def __init__(self, rid: int, engine=None):
+        self.rid = rid
+        self.engine = engine
+        self.alive = True
+        self.assigned: list[Request] = []
+
+    def stats(self) -> ReplicaStats:
+        if not self.alive:
+            return ReplicaStats(alive=False)
+        if self.engine is None:
+            return ReplicaStats(
+                queued_tokens=sum(r.prefill_remaining for r in self.assigned),
+                active_requests=len(self.assigned))
+        sched = self.engine.scheduler
+        queued = sum(r.prefill_remaining for r in sched.waiting) + \
+            sum(r.prefill_remaining for r in sched.active)
+        return ReplicaStats(queued_tokens=queued,
+                            active_requests=sched.n_active + sched.n_waiting)
+
+    def submit(self, req: Request) -> None:
+        self.assigned.append(req)
+        if self.engine is not None:
+            self.engine.submit(req)
+
+
+class Router:
+    def __init__(self, replicas: list[ReplicaHandle],
+                 straggler_alpha: float = 0.2):
+        assert replicas
+        self.replicas = replicas
+        self.straggler = StragglerMitigator(len(replicas),
+                                            alpha=straggler_alpha)
+        self.dispatched = 0
+        self.redispatched = 0
+
+    # ---- dispatch ----------------------------------------------------------
+    def submit(self, req: Request) -> int:
+        """Route to argmin of (backlog / speed-share).  Returns replica id."""
+        shares = self.straggler.shares()
+        best, best_cost = None, None
+        for i, rep in enumerate(self.replicas):
+            if not rep.alive:
+                continue
+            st = rep.stats()
+            backlog = st.queued_tokens + 64 * st.active_requests \
+                + req.prompt_len
+            cost = backlog / max(shares[i], 1e-9)
+            if best_cost is None or cost < best_cost:
+                best, best_cost = i, cost
+        if best is None:
+            raise RuntimeError("no live replicas")
+        self.replicas[best].submit(req)
+        self.dispatched += 1
+        return best
+
+    # ---- health ------------------------------------------------------------
+    def observe_step_times(self, times: list[float]) -> None:
+        self.straggler.observe(times)
+
+    def mark_failed(self, rid: int) -> list[Request]:
+        """Kill a replica; re-dispatch its un-prefilled requests."""
+        rep = self.replicas[rid]
+        rep.alive = False
+        orphans = [r for r in rep.assigned
+                   if r.state in (State.WAITING, State.PREFILL)]
+        rep.assigned = []
+        moved = []
+        for r in orphans:
+            r.state = State.WAITING
+            r.prefill_done = 0
+            r.output = []
+            r.slot = -1
+            self.submit(r)
+            self.redispatched += 1
+            moved.append(r)
+        return moved
+
+    @property
+    def n_alive(self) -> int:
+        return sum(1 for r in self.replicas if r.alive)

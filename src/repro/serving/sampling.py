@@ -1,0 +1,25 @@
+"""Token samplers (jit-compatible)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jax.Array) -> jax.Array:
+    """logits: (B, V) or (B, K, V) -> (B,) / (B, K) int32."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature(logits: jax.Array, key: jax.Array, temp: float = 1.0) -> jax.Array:
+    if temp <= 0:
+        return greedy(logits)
+    return jax.random.categorical(key, logits.astype(jnp.float32) / temp,
+                                  axis=-1).astype(jnp.int32)
+
+
+def top_k(logits: jax.Array, key: jax.Array, k: int = 50,
+          temp: float = 1.0) -> jax.Array:
+    vals, idx = jax.lax.top_k(logits, k)
+    choice = jax.random.categorical(key, vals.astype(jnp.float32) / max(temp, 1e-6),
+                                    axis=-1)
+    return jnp.take_along_axis(idx, choice[..., None], axis=-1)[..., 0].astype(jnp.int32)

@@ -1,0 +1,135 @@
+"""Global batch scheduler (paper §4.2): continuous batching + chunked
+prefill + discrete batching, with asynchronous EOS handling (§5.3).
+
+Every iteration the scheduler emits a ``BatchPlan``:
+  * all active decode requests contribute one token each;
+  * head-of-line prefill requests contribute chunks sized to top the dense
+    batch up to the chosen *discrete* size (paper: GEMM efficiency cliffs —
+    launch 2048, never 2049);
+  * new requests are admitted eagerly while the KV peak-memory estimate fits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+from repro.serving.kvcache import PagedKVManager
+from repro.serving.request import Request, State
+
+
+@dataclasses.dataclass
+class PrefillChunk:
+    req: Request
+    offset: int          # token offset within the prompt
+    length: int
+
+
+@dataclasses.dataclass
+class BatchPlan:
+    decode: list[Request]
+    prefill: list[PrefillChunk]
+    dense_batch: int     # the discrete dense size this plan fills
+
+    @property
+    def dense_tokens(self) -> int:
+        return len(self.decode) + sum(c.length for c in self.prefill)
+
+
+class GlobalBatchScheduler:
+    def __init__(self, kv: PagedKVManager, *,
+                 discrete_sizes: tuple[int, ...] = (2048, 1024, 512, 256, 128,
+                                                    64, 32, 16, 8),
+                 max_active: int = 256,
+                 prefill_chunk_min: int = 8):
+        self.kv = kv
+        self.sizes = tuple(sorted(discrete_sizes, reverse=True))
+        self.max_active = max_active
+        self.chunk_min = prefill_chunk_min
+        self.waiting: deque[Request] = deque()
+        self.active: list[Request] = []
+
+    # ---- admission ---------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    def _admit(self) -> None:
+        """Eager admission under the peak-memory estimate (§4.4)."""
+        while self.waiting and len(self.active) < self.max_active:
+            cand = self.waiting[0]
+            if not self.kv.can_admit(cand, self.active):
+                break
+            if not self.kv.allocate(cand.rid, max(cand.prompt_len, 1)):
+                break
+            self.waiting.popleft()
+            cand.state = State.PREFILL
+            self.active.append(cand)
+
+    # ---- discrete batching (§4.2) -------------------------------------------
+    def _pick_dense(self, available: int) -> int:
+        for s in self.sizes:
+            if s <= available:
+                return s
+        return self.sizes[-1]
+
+    # ---- per-iteration plan --------------------------------------------------
+    def plan(self) -> Optional[BatchPlan]:
+        self._admit()
+        decode = [r for r in self.active if r.state == State.DECODE]
+        prefilling = [r for r in self.active if r.state == State.PREFILL]
+
+        available = len(decode) + sum(r.prefill_remaining for r in prefilling)
+        if available == 0:
+            return None
+        dense = self._pick_dense(available)
+
+        budget = max(dense - len(decode), 0)
+        chunks: list[PrefillChunk] = []
+        for r in prefilling:
+            if budget < min(self.chunk_min, r.prefill_remaining):
+                break
+            take = min(budget, r.prefill_remaining)
+            chunks.append(PrefillChunk(req=r, offset=r.prefill_done, length=take))
+            budget -= take
+        return BatchPlan(decode=decode, prefill=chunks, dense_batch=dense)
+
+    # ---- post-iteration bookkeeping -------------------------------------------
+    def commit(self, plan: BatchPlan, sampled: dict[int, int],
+               now: float) -> list[Request]:
+        """Apply iteration results.  ``sampled``: rid -> next token id.
+
+        EOS is *not* acted on this iteration (async top-level scheduling,
+        §5.3): the request is flagged and removed when the *next* plan is
+        formed, generating one extra token — paper's <1% overhead."""
+        finished = []
+        for c in plan.prefill:
+            c.req.prefill_done += c.length
+            self.kv.extend(c.req.rid, max(c.req.total_tokens, 1))
+            if c.req.prefill_remaining == 0:
+                c.req.state = State.DECODE
+        for r in list(plan.decode) + [c.req for c in plan.prefill
+                                      if c.req.state == State.DECODE]:
+            tok = sampled.get(r.rid)
+            if tok is None:
+                continue
+            if r.first_token_at is None:
+                r.first_token_at = now
+            r.output.append(tok)
+            self.kv.extend(r.rid, r.total_tokens + 1)
+            hit_eos = (r.eos_id is not None and tok == r.eos_id)
+            if r.pending_eos or len(r.output) >= r.max_new_tokens:
+                r.state = State.FINISHED
+                r.finished_at = now
+                finished.append(r)
+            elif hit_eos:
+                r.pending_eos = True       # detected next iteration
+        self.active = [r for r in self.active if r.state != State.FINISHED]
+        return finished
+
+    @property
+    def n_active(self) -> int:
+        return len(self.active)
+
+    @property
+    def n_waiting(self) -> int:
+        return len(self.waiting)

@@ -1,0 +1,120 @@
+"""Cost-model tests: reproduction of the paper's published numbers +
+hypothesis property tests of the §3 equations."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import costmodel as cm
+from repro.core.autosearch import autosearch, sequential_schedule
+
+
+@pytest.fixture(scope="module")
+def llama70b():
+    return cm.model_stats(get_config("llama2-70b"))
+
+
+class TestPaperNumbers:
+    """Exact checks against the paper's published values."""
+
+    def test_param_count(self, llama70b):
+        assert 67e9 < llama70b.p_model < 70e9
+
+    def test_optimal_throughput_eq9(self, llama70b):
+        # paper §3.4: 8×A100 → ≈17828 tok/s (they use exactly 70e9 params)
+        opt = cm.optimal_throughput(cm.A100_80G, llama70b, 8)
+        assert abs(opt - 17828) / 17828 < 0.05
+
+    def test_table2_gemm_rows(self, llama70b):
+        rows = {r["op"]: r for r in cm.table2(
+            get_config("llama2-70b"), cm.Workload(512, 1024), cm.A100_80G, 8,
+            bdense=2048)}
+        # paper Table 2 GFLOP column (exact formulas)
+        assert abs(rows["GEMM-KQV"]["gflops"] - 27487.8) < 1.0
+        assert abs(rows["GEMM-O"]["gflops"] - 21990.2) < 1.0
+        assert abs(rows["GEMM-UG"]["gflops"] - 153931.6) < 1.0
+        assert abs(rows["GEMM-D"]["gflops"] - 76965.8) < 1.0
+
+    def test_table2_comm_row(self, llama70b):
+        rows = cm.table2(get_config("llama2-70b"), cm.Workload(512, 1024),
+                         cm.A100_80G, 8, bdense=2048)
+        net_gb = sum(r["net_gb"] for r in rows)
+        t_net = sum(r["t_net_ms"] for r in rows)
+        assert abs(net_gb - 75.2) < 1.0          # paper: 75.2 GB
+        assert abs(t_net - 31.33) < 1.0          # paper: 31.33 ms
+
+    def test_compute_bound_classification(self, llama70b):
+        # paper Fig. 2: LLaMA-2-70B @ 8×A100 is compute-bound on all traces
+        for w in (cm.WORKLOADS["splitwise"], cm.WORKLOADS["lmsys"],
+                  cm.WORKLOADS["sharegpt"]):
+            assert cm.classify(cm.A100_80G, llama70b, w, 8) == "compute-bound"
+
+    def test_nanoflow_beats_sequential(self, llama70b):
+        cfg = get_config("llama2-70b")
+        w = cm.Workload(512, 1024)
+        nano = autosearch(cfg, w, cm.A100_80G, 8, bdense=2048)
+        seq = sequential_schedule(cfg, w, cm.A100_80G, 8, bdense=2048)
+        speedup = seq.iter_time / nano.iter_time
+        # paper ablation (Fig. 13): ≥1.17× over non-overlap; model ≈1.2–1.9×
+        assert 1.1 < speedup < 2.5
+
+
+hw_strat = st.sampled_from(list(cm.HARDWARE.values()))
+w_strat = st.builds(cm.Workload,
+                    p=st.floats(16, 8192), d=st.floats(1, 4096))
+
+
+class TestProperties:
+    @given(w=w_strat, n=st.integers(1, 64))
+    @settings(max_examples=50, deadline=None)
+    def test_eq9_independent_of_workload(self, w, n):
+        """Optimal throughput depends only on compute and params (§3.4)."""
+        ms = cm.model_stats(get_config("llama2-70b"))
+        base = cm.optimal_throughput(cm.A100_80G, ms, n)
+        assert base == cm.optimal_throughput(cm.A100_80G, ms, n)
+        assert base == pytest.approx(
+            n * cm.A100_80G.compute / (2 * ms.p_active))
+
+    @given(p=st.floats(16, 4096), d1=st.floats(1, 2000), delta=st.floats(1, 2000))
+    @settings(max_examples=50, deadline=None)
+    def test_tr_monotone_in_decode_length(self, p, d1, delta):
+        """Longer decode (fixed prefill) pushes memory-bound (§3.3)."""
+        ms = cm.model_stats(get_config("llama2-70b"))
+        t1 = cm.t_r(cm.A100_80G, ms, cm.Workload(p, d1), 8)
+        t2 = cm.t_r(cm.A100_80G, ms, cm.Workload(p, d1 + delta), 8)
+        assert t2 >= t1 * 0.999
+
+    @given(w=w_strat)
+    @settings(max_examples=30, deadline=None)
+    def test_times_positive_and_finite(self, w):
+        ms = cm.model_stats(get_config("qwen3-8b"))
+        for fn in (cm.t_mem, ):
+            assert fn(cm.TPU_V5E) > 0
+        assert 0 < cm.t_compute(cm.TPU_V5E, ms, w, 256) < 1e4
+        assert 0 <= cm.t_net(cm.TPU_V5E, ms, w, 256) < 1e4
+
+    @given(b=st.integers(32, 4096))
+    @settings(max_examples=20, deadline=None)
+    def test_table2_scales_linearly_in_batch(self, b):
+        cfg = get_config("llama2-70b")
+        w = cm.Workload(512, 1024)
+        r1 = cm.table2(cfg, w, cm.A100_80G, 8, bdense=b)
+        r2 = cm.table2(cfg, w, cm.A100_80G, 8, bdense=2 * b)
+        g1 = next(r["gflops"] for r in r1 if r["op"] == "GEMM-UG")
+        g2 = next(r["gflops"] for r in r2 if r["op"] == "GEMM-UG")
+        assert g2 == pytest.approx(2 * g1, rel=1e-6)
+
+    @given(w=w_strat, n=st.integers(2, 64))
+    @settings(max_examples=30, deadline=None)
+    def test_schedule_never_slower_than_critical_lower_bound(self, w, n):
+        """Overlapped schedule >= max single-resource time (can't beat the
+        bottleneck resource) and <= sequential sum."""
+        cfg = get_config("qwen3-8b")
+        nano = autosearch(cfg, w, cm.TPU_V5E, n, bdense=2048)
+        seq = sequential_schedule(cfg, w, cm.TPU_V5E, n, bdense=2048)
+        assert nano.iter_time <= seq.iter_time * 1.001
+        per_kind = {}
+        for node in nano.pipeline.nodes.values():
+            per_kind[node.kind] = per_kind.get(node.kind, 0.0) + node.work
+        assert nano.iter_time >= max(per_kind.values()) * 0.999

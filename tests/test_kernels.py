@@ -1,0 +1,155 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True) vs the pure-jnp
+oracles in kernels/ref.py, across shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention, paged_decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.fused_overlap import fused_overlap
+from repro.kernels.ssm_scan import ssm_scan
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,sq,skv,h,kv,d,causal,qoff", [
+    (2, 64, 64, 4, 2, 32, True, 0),
+    (1, 37, 53, 6, 2, 16, True, 16),      # ragged + chunked-prefill offset
+    (2, 128, 128, 8, 8, 64, True, 0),     # MHA
+    (1, 16, 16, 4, 1, 8, False, 0),       # MQA, non-causal
+    (1, 96, 96, 16, 2, 128, True, 0),     # MXU-width head_dim
+])
+def test_flash_attention(b, sq, skv, h, kv, d, causal, qoff, dtype):
+    q = jnp.asarray(RNG.normal(size=(b, sq, h, d)), dtype)
+    k = jnp.asarray(RNG.normal(size=(b, skv, kv, d)), dtype)
+    v = jnp.asarray(RNG.normal(size=(b, skv, kv, d)), dtype)
+    out = flash_attention(q, k, v, causal=causal, q_offset=qoff,
+                          block_q=32, block_k=32, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, q_offset=qoff)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,kv,d", [
+    (2, 64, 4, 2, 32), (3, 100, 8, 8, 16), (1, 256, 16, 2, 64),
+    (4, 48, 8, 1, 128),
+])
+def test_decode_attention(b, s, h, kv, d, dtype):
+    q = jnp.asarray(RNG.normal(size=(b, h, d)), dtype)
+    k = jnp.asarray(RNG.normal(size=(b, s, kv, d)), dtype)
+    v = jnp.asarray(RNG.normal(size=(b, s, kv, d)), dtype)
+    clen = jnp.asarray(RNG.integers(1, s + 1, size=(b,)), jnp.int32)
+    out = decode_attention(q, k, v, clen, block_k=32, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, clen)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("b,npages,ps,maxp,h,kv,d", [
+    (2, 16, 8, 6, 4, 2, 32), (3, 32, 16, 4, 8, 4, 16), (1, 8, 4, 8, 2, 1, 64),
+])
+def test_paged_decode_attention(b, npages, ps, maxp, h, kv, d):
+    q = jnp.asarray(RNG.normal(size=(b, h, d)), jnp.float32)
+    kp = jnp.asarray(RNG.normal(size=(npages, ps, kv, d)), jnp.float32)
+    vp = jnp.asarray(RNG.normal(size=(npages, ps, kv, d)), jnp.float32)
+    pt = np.full((b, maxp), -1, np.int32)
+    clen = []
+    for i in range(b):
+        n = int(RNG.integers(1, maxp + 1))
+        pt[i, :n] = RNG.choice(npages, size=n, replace=False)
+        clen.append(int(RNG.integers((n - 1) * ps + 1, n * ps + 1)))
+    pt, clen = jnp.asarray(pt), jnp.asarray(clen, jnp.int32)
+    out = paged_decode_attention(q, kp, vp, pt, clen, interpret=True)
+    want = ref.paged_decode_attention_ref(q, kp, vp, pt, clen)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("frac", [0.25, 0.5, 1.0])
+@pytest.mark.parametrize("m,k,n,b,s,h,kv,d", [
+    (128, 64, 96, 2, 64, 4, 2, 32),
+    (64, 32, 512, 1, 256, 4, 1, 64),
+])
+def test_fused_overlap(m, k, n, b, s, h, kv, d, frac):
+    x = jnp.asarray(RNG.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(k, n)), jnp.float32)
+    q = jnp.asarray(RNG.normal(size=(b, h, d)), jnp.float32)
+    kc = jnp.asarray(RNG.normal(size=(b, s, kv, d)), jnp.float32)
+    vc = jnp.asarray(RNG.normal(size=(b, s, kv, d)), jnp.float32)
+    clen = jnp.asarray(RNG.integers(1, s + 1, size=(b,)), jnp.int32)
+    go, ao = fused_overlap(x, w, q, kc, vc, clen, gemm_fraction=frac,
+                           block_n=64, block_s=32, interpret=True)
+    rg, ra = ref.fused_overlap_ref(x, w, q, kc, vc, clen)
+    np.testing.assert_allclose(np.asarray(go), np.asarray(rg), rtol=1e-4,
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(ao), np.asarray(ra), rtol=1e-5,
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("bsz,s,c,n,chunk,bc,h0", [
+    (2, 32, 16, 4, 8, 8, False),
+    (1, 100, 64, 16, 16, 32, True),
+    (3, 64, 48, 8, 64, 48, True),
+])
+def test_ssm_scan(bsz, s, c, n, chunk, bc, h0):
+    x = jnp.asarray(RNG.normal(size=(bsz, s, c)), jnp.float32)
+    dt = jnp.asarray(np.abs(RNG.normal(size=(bsz, s, c))) * 0.1, jnp.float32)
+    a = -jnp.asarray(np.abs(RNG.normal(size=(c, n))) + 0.1, jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(bsz, s, n)), jnp.float32)
+    cm = jnp.asarray(RNG.normal(size=(bsz, s, n)), jnp.float32)
+    d = jnp.asarray(RNG.normal(size=(c,)), jnp.float32)
+    h0a = jnp.asarray(RNG.normal(size=(bsz, c, n)), jnp.float32) if h0 else None
+    y, hf = ssm_scan(x, dt, a, b, cm, d, h0a, chunk=chunk, block_c=bc,
+                     interpret=True)
+    yr, hr = ref.ssm_scan_ref(x, dt, a, b, cm, d, h0a)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hr), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_ssm_scan_vs_step_consistency():
+    """Chunked kernel == sequential single-step recurrence."""
+    bsz, s, c, n = 1, 12, 8, 4
+    x = jnp.asarray(RNG.normal(size=(bsz, s, c)), jnp.float32)
+    dt = jnp.asarray(np.abs(RNG.normal(size=(bsz, s, c))) * 0.1, jnp.float32)
+    a = -jnp.asarray(np.abs(RNG.normal(size=(c, n))) + 0.1, jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(bsz, s, n)), jnp.float32)
+    cm = jnp.asarray(RNG.normal(size=(bsz, s, n)), jnp.float32)
+    d = jnp.asarray(RNG.normal(size=(c,)), jnp.float32)
+    y, hf = ssm_scan(x, dt, a, b, cm, d, chunk=4, block_c=8, interpret=True)
+    h = jnp.zeros((bsz, c, n), jnp.float32)
+    ys = []
+    for t in range(s):
+        yt, h = ref.ssm_step_ref(x[:, t], dt[:, t], a, b[:, t], cm[:, t], d, h)
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(y), np.stack(ys, 1), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(h), rtol=1e-4,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n,bm,bn,bk", [
+    (64, 32, 48, 32, 16, 16),
+    (100, 64, 128, 32, 64, 32),     # ragged M
+    (16, 128, 16, 16, 16, 32),      # K-major sweep
+])
+def test_swiglu_fused(m, k, n, bm, bn, bk):
+    from repro.kernels.swiglu import swiglu, swiglu_ref
+    x = jnp.asarray(RNG.normal(size=(m, k)), jnp.float32)
+    wg = jnp.asarray(RNG.normal(size=(k, n)), jnp.float32)
+    wu = jnp.asarray(RNG.normal(size=(k, n)), jnp.float32)
+    out = swiglu(x, wg, wu, block_m=bm, block_n=bn, block_k=bk,
+                 interpret=True)
+    want = swiglu_ref(x, wg, wu)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,48 @@
+"""int8 KV-cache quantization: round-trip error bounds + attention accuracy
++ footprint accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ref import decode_attention_ref
+from repro.serving import kvquant
+
+RNG = np.random.default_rng(21)
+
+
+@given(scale=st.floats(0.01, 100.0), seed=st.integers(0, 50))
+@settings(max_examples=40, deadline=None)
+def test_quant_roundtrip_error_bound(scale, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(4, 8, 16)) * scale, jnp.float32)
+    q, s = kvquant.quantize_kv(x)
+    back = kvquant.dequantize_kv(q, s, jnp.float32)
+    # symmetric int8: error <= scale/2 per element = max|row|/254
+    bound = np.asarray(jnp.max(jnp.abs(x), axis=-1))[..., None] / 254 + 1e-6
+    assert (np.abs(np.asarray(back - x)) <= bound * 1.01).all()
+
+
+def test_quant_attention_close_to_fp():
+    b, s, h, kv, d = 2, 64, 8, 2, 32
+    q = jnp.asarray(RNG.normal(size=(b, h, d)), jnp.bfloat16)
+    k = jnp.asarray(RNG.normal(size=(b, s, kv, d)), jnp.bfloat16)
+    v = jnp.asarray(RNG.normal(size=(b, s, kv, d)), jnp.bfloat16)
+    clen = jnp.full((b,), s, jnp.int32)
+
+    cache = kvquant.init_quant_cache(b, s, kv, d)
+    for t in range(s):
+        cache = kvquant.write_token(cache, k[:, t], v[:, t],
+                                    jnp.full((b,), t, jnp.int32))
+    out_q = kvquant.quant_decode_attention(q, cache, clen)
+    out_f = decode_attention_ref(q, k, v, clen)
+    err = float(jnp.abs(out_q.astype(jnp.float32)
+                        - out_f.astype(jnp.float32)).max())
+    scale = float(jnp.abs(out_f.astype(jnp.float32)).max()) + 1e-9
+    assert err < 0.05 * scale, (err, scale)   # int8 KV keeps logits within 5%
+
+
+def test_footprint_halves():
+    full = kvquant.cache_bytes(128, 32768, 8, 128, quantized=False)
+    quant = kvquant.cache_bytes(128, 32768, 8, 128, quantized=True)
+    assert quant < 0.52 * full                # ~2x minus scale overhead

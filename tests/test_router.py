@@ -1,0 +1,52 @@
+"""Multi-replica router: load balance, straggler skew, failure re-dispatch."""
+import numpy as np
+import pytest
+
+from repro.serving.request import Request
+from repro.serving.router import ReplicaHandle, Router
+
+
+def _reqs(n, plen=32):
+    return [Request(rid=i, prompt=list(range(plen)), max_new_tokens=8)
+            for i in range(n)]
+
+
+def test_balanced_dispatch():
+    router = Router([ReplicaHandle(i) for i in range(4)])
+    counts = [0] * 4
+    for r in _reqs(40):
+        counts[router.submit(r)] += 1
+    assert max(counts) - min(counts) <= 2     # near-uniform under equal load
+
+
+def test_straggler_gets_less():
+    router = Router([ReplicaHandle(i) for i in range(4)], straggler_alpha=1.0)
+    router.observe_step_times([1.0, 1.0, 1.0, 3.0])    # replica 3 slow
+    counts = [0] * 4
+    for r in _reqs(60):
+        counts[router.submit(r)] += 1
+    assert counts[3] == min(counts)
+    assert counts[3] < sum(counts) / 4
+
+
+def test_failure_redispatch():
+    router = Router([ReplicaHandle(i) for i in range(3)])
+    for r in _reqs(12):
+        router.submit(r)
+    before = sum(len(rep.assigned) for rep in router.replicas)
+    moved = router.mark_failed(1)
+    assert router.n_alive == 2
+    assert all(not router.replicas[1].assigned for _ in [0])
+    after = sum(len(rep.assigned) for rep in router.replicas if rep.alive)
+    assert after == before                    # nothing lost
+    assert router.redispatched == len(moved) > 0
+    # further submissions avoid the dead replica
+    for r in _reqs(6):
+        assert router.submit(r) != 1
+
+
+def test_no_live_replicas_raises():
+    router = Router([ReplicaHandle(0)])
+    router.mark_failed(0)
+    with pytest.raises(RuntimeError):
+        router.submit(Request(rid=99, prompt=[1, 2], max_new_tokens=2))

@@ -1,0 +1,54 @@
+"""Streaming (flash-style XLA) attention: allclose vs ref + property sweep."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ref import flash_attention_ref, flash_attention_stream
+
+RNG = np.random.default_rng(13)
+
+
+@pytest.mark.parametrize("b,sq,skv,h,kv,d,causal,qoff,blk", [
+    (1, 64, 64, 4, 2, 16, True, 0, 16),
+    (2, 37, 53, 6, 2, 32, True, 16, 8),
+    (1, 128, 128, 8, 8, 64, False, 0, 32),
+    (1, 16, 96, 2, 1, 8, True, 80, 64),   # long cache, short q
+])
+def test_stream_matches_ref(b, sq, skv, h, kv, d, causal, qoff, blk):
+    q = jnp.asarray(RNG.normal(size=(b, sq, h, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, skv, kv, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, skv, kv, d)), jnp.float32)
+    o1 = flash_attention_stream(q, k, v, causal=causal, q_offset=qoff,
+                                block=blk)
+    o2 = flash_attention_ref(q, k, v, causal=causal, q_offset=qoff)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-5,
+                               atol=2e-5)
+
+
+@given(sq=st.integers(1, 48), skv=st.integers(1, 80),
+       blk=st.sampled_from([4, 16, 64]), seed=st.integers(0, 50))
+@settings(max_examples=25, deadline=None)
+def test_stream_property(sq, skv, blk, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(1, sq, 2, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, skv, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, skv, 2, 8)), jnp.float32)
+    # non-causal so q/k lengths are unconstrained
+    o1 = flash_attention_stream(q, k, v, causal=False, block=blk)
+    o2 = flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_stream_grad_matches_ref():
+    q = jnp.asarray(RNG.normal(size=(1, 32, 2, 8)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 32, 2, 8)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 32, 2, 8)), jnp.float32)
+    g1 = jax.grad(lambda q_: jnp.sum(
+        flash_attention_stream(q_, k, v, block=8) ** 2))(q)
+    g2 = jax.grad(lambda q_: jnp.sum(
+        flash_attention_ref(q_, k, v) ** 2))(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-4,
+                               atol=1e-4)

@@ -1,0 +1,127 @@
+"""End-to-end system behaviour tests (replaces the scaffold placeholder):
+the full NanoFlow loop — cost model -> autosearch plan -> engine run —
+plus model-level semantics the paper depends on."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, applicable_shapes, get_config, scale_down
+from repro.core import costmodel as cm
+from repro.core.autosearch import autosearch, throughput_estimate
+from repro.models import model
+from repro.serving.engine import ServeEngine
+from repro.serving.request import Request
+
+
+def test_shape_cells_are_the_assignment():
+    """10 archs × shapes: long_500k only for ssm/hybrid (DESIGN.md §4)."""
+    archs = ["jamba-1.5-large-398b", "xlstm-1.3b", "qwen3-4b", "minitron-4b",
+             "qwen3-8b", "starcoder2-7b", "llava-next-34b", "musicgen-medium",
+             "arctic-480b", "deepseek-v2-236b"]
+    cells = [(a, s.name) for a in archs
+             for s in applicable_shapes(get_config(a))]
+    assert len(cells) == 32  # 8 archs x 3 + 2 archs x 4
+    long_ctx = [a for a, s in cells if s == "long_500k"]
+    assert sorted(long_ctx) == ["jamba-1.5-large-398b", "xlstm-1.3b"]
+
+
+def test_param_counts_sane():
+    """Config-derived parameter counts match the published model sizes."""
+    expect = {
+        "jamba-1.5-large-398b": (330e9, 430e9),
+        # assignment config is tagged "unverified"; block-diag qkv + untied
+        # head at 48L/2048d lands at 2.0B
+        "xlstm-1.3b": (1.0e9, 2.2e9),
+        "qwen3-4b": (3.2e9, 5.0e9),
+        "minitron-4b": (3.5e9, 5.2e9),
+        "qwen3-8b": (7.0e9, 9.3e9),
+        "starcoder2-7b": (6.3e9, 8.0e9),
+        "llava-next-34b": (30e9, 38e9),
+        # decoder only (the T5 text encoder is out of scope / stubbed)
+        "musicgen-medium": (1.2e9, 2.4e9),
+        "arctic-480b": (420e9, 520e9),
+        "deepseek-v2-236b": (210e9, 260e9),
+        "llama2-70b": (67e9, 70e9),
+    }
+    for name, (lo, hi) in expect.items():
+        n = model.num_params(get_config(name))
+        assert lo <= n <= hi, f"{name}: {n/1e9:.1f}B not in [{lo/1e9},{hi/1e9}]"
+
+
+def test_moe_active_params_below_total():
+    for name in ("arctic-480b", "deepseek-v2-236b", "jamba-1.5-large-398b"):
+        cfg = get_config(name)
+        assert model.active_params(cfg) < 0.5 * model.num_params(cfg)
+
+
+def test_autosearch_improves_all_ported_models():
+    """Paper Fig. 15 analogue: overlap plan beats sequential for every arch
+    the technique applies to (network or memory ops to hide)."""
+    from repro.core.autosearch import sequential_schedule
+    w = cm.Workload(1024, 512)
+    for name in ("llama2-70b", "qwen3-8b", "arctic-480b",
+                 "deepseek-v2-236b", "llava-next-34b"):
+        cfg = get_config(name)
+        nano = autosearch(cfg, w, cm.TPU_V5E, 256)
+        seq = sequential_schedule(cfg, w, cm.TPU_V5E, 256)
+        assert nano.iter_time < seq.iter_time, name
+
+
+def test_full_serving_path_with_offload_and_accounting():
+    cfg = get_config("tiny-toy")
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_slots=3, max_len=48,
+                      discrete_sizes=(16, 8), avg_decode_len=4)
+    rng = np.random.default_rng(7)
+    reqs = [Request(rid=i, prompt=list(rng.integers(0, 64, size=9)),
+                    max_new_tokens=4) for i in range(7)]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 7
+    # all KV offloaded for multi-round reuse
+    assert eng.kv.stats.aggregated_copies == 7
+    assert eng.kv.pages_used == 0
+    # continuous batching keeps slots busy: far fewer iters than serial
+    assert eng.stats.iterations < 7 * (4 + 3)
+
+
+def test_decode_cache_donation_single_buffer():
+    """The jitted decode step donates the cache (no double-buffering)."""
+    cfg = get_config("tiny-toy")
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    cache = model.init_cache(cfg, 1, 2, 16)
+    clen = jnp.zeros((2,), jnp.int32)
+    toks = jnp.zeros((2, 1), jnp.int32)
+    fn = jax.jit(lambda p, c, t, l: model.forward_decode(cfg, p, t, c, l),
+                 donate_argnums=(1,))
+    logits, new_cache = fn(params, cache, toks, clen)
+    assert logits.shape == (2, cfg.vocab_size)
+    with pytest.raises(RuntimeError):
+        _ = np.asarray(jax.tree.leaves(cache)[0])   # donated => invalidated
+
+
+def test_vlm_and_audio_input_specs():
+    llava = get_config("llava-next-34b")
+    sp = model.input_specs(llava, SHAPES["prefill_32k"])
+    assert sp["patches"].shape == (32, 1024, llava.d_model)
+    assert sp["tokens"].shape == (32, 32768 - 1024)
+    mg = get_config("musicgen-medium")
+    sp = model.input_specs(mg, SHAPES["train_4k"])
+    assert sp["tokens"].shape == (256, 4096, 4)
+    sp = model.input_specs(mg, SHAPES["decode_32k"])
+    assert sp["tokens"].shape == (128, 1, 4)
+    assert sp["cache_len"].shape == (128,)
+
+
+def test_throughput_estimate_below_optimal():
+    cfg = get_config("llama2-70b")
+    w = cm.Workload(512, 1024)
+    ms = cm.model_stats(cfg)
+    sched = autosearch(cfg, w, cm.A100_80G, 8, bdense=2048)
+    tp = throughput_estimate(cfg, sched, w, cm.A100_80G, 8, bdense=2048)
+    opt = cm.optimal_throughput(cm.A100_80G, ms, 8) / 8
+    assert 0.3 * opt < tp <= opt * 1.001
