@@ -8,6 +8,8 @@
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import numpy as np
 
@@ -48,31 +50,70 @@ def modeled(arch: str, hw: cm.Hardware, n_dev: int, bdense: float = 2048
     return rows
 
 
+def _submit_workload(eng, name: str, p: int, d: int, n_requests: int,
+                     vocab: int, rid0: int) -> None:
+    rng = np.random.default_rng(0)
+    for i in range(n_requests):
+        plen = max(2, int(rng.exponential(p))) if "like" in name else p
+        dlen = max(2, int(rng.exponential(d))) if "like" in name else d
+        eng.submit(Request(rid=rid0 + i,
+                           prompt=list(rng.integers(0, vocab,
+                                                    size=min(plen, 64))),
+                           max_new_tokens=min(dlen, 32)))
+
+
 def engine_measured(n_requests: int = 12) -> list[dict]:
+    """Real engine runs, A/B-ing the incremental chunked-prefill path
+    (O(p) model FLOPs per prompt, DESIGN.md §7) against the legacy
+    prefix-recompute path (O(p²/chunk)).  Each mode runs the workload twice
+    and reports the second pass, so XLA compile time (which differs between
+    the modes' compile-cache footprints) doesn't pollute the A/B.
+    ``prefill_flops_per_tok`` uses the 2·N_active forward rule scaled by the
+    measured model-token expansion."""
     cfg = get_config("tiny-toy")
     params = model.init(cfg, jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
+    flops_fwd = 2 * model.active_params(cfg)
     rows = []
     for name, p, d in [("sharegpt-like", 12, 16), ("const", 16, 8)]:
-        eng = ServeEngine(cfg, params, max_slots=4, max_len=128,
-                          discrete_sizes=(64, 32, 16, 8), avg_decode_len=d)
-        for i in range(n_requests):
-            plen = max(2, int(rng.exponential(p))) if "like" in name else p
-            dlen = max(2, int(rng.exponential(d))) if "like" in name else d
-            eng.submit(Request(rid=i,
-                               prompt=list(rng.integers(0, cfg.vocab_size,
-                                                        size=min(plen, 64))),
-                               max_new_tokens=min(dlen, 32)))
-        done = eng.run()
-        st = eng.stats
-        rows.append({
-            "bench": "offline_throughput_engine",
-            "case": f"tiny-toy/{name}",
-            "finished": len(done),
-            "tokens": st.total_tokens,
-            "tok_s_cpu": round(st.throughput, 1),
-            "iters": st.iterations,
-        })
+        per_mode: dict[str, dict] = {}
+        for mode in ("incremental", "recompute"):
+            eng = ServeEngine(cfg, params, max_slots=4, max_len=128,
+                              discrete_sizes=(64, 32, 16, 8),
+                              avg_decode_len=d, prefill_mode=mode)
+            # warmup pass: same length mix -> compiles every program shape
+            _submit_workload(eng, name, p, d, n_requests, cfg.vocab_size, 0)
+            eng.run()
+            warm = dataclasses.replace(eng.stats,
+                                       dense_batch_hist=dict(
+                                           eng.stats.dense_batch_hist))
+            # measured pass
+            _submit_workload(eng, name, p, d, n_requests, cfg.vocab_size,
+                             n_requests)
+            done = eng.run()
+            st = eng.stats
+            tokens = st.total_tokens - warm.total_tokens
+            wall = st.wall_time - warm.wall_time
+            prefill_tok = st.prefill_tokens - warm.prefill_tokens
+            model_tok = st.prefill_model_tokens - warm.prefill_model_tokens
+            expansion = model_tok / max(prefill_tok, 1)
+            prefill_s = st.prefill_time - warm.prefill_time
+            per_mode[mode] = {
+                "bench": "offline_throughput_engine",
+                "case": f"tiny-toy/{name}/{mode}",
+                "finished": len(done),
+                "tokens": tokens,
+                "tok_s_cpu": round(tokens / max(wall, 1e-9), 1),
+                "iters": st.iterations - warm.iterations,
+                "_prefill_s_raw": prefill_s,       # unrounded, for the ratio
+                "prefill_s": round(prefill_s, 3),
+                "prefill_expansion": round(expansion, 3),
+                "prefill_flops_per_tok": round(flops_fwd * expansion),
+            }
+        inc, rec = per_mode["incremental"], per_mode["recompute"]
+        inc["prefill_speedup_vs_recompute"] = round(
+            rec.pop("_prefill_s_raw") / max(inc.pop("_prefill_s_raw"), 1e-9),
+            3)
+        rows += [inc, rec]
     return rows
 
 
@@ -91,8 +132,14 @@ def main() -> None:
                   f"opt={r['optimal_tok_s_dev']} ({r['pct_optimal']}% of optimal, "
                   f"{r['speedup']}x)")
         else:
+            extra = ""
+            if "prefill_speedup_vs_recompute" in r:
+                extra = (f" prefill {r['prefill_s']}s "
+                         f"({r['prefill_speedup_vs_recompute']}x vs recompute)")
             print(f"fig10/{r['case']},0.0,{r['tok_s_cpu']} tok/s CPU "
-                  f"({r['tokens']} tokens, {r['iters']} iters)")
+                  f"({r['tokens']} tokens, {r['iters']} iters, "
+                  f"{r['prefill_expansion']}x prefill work, "
+                  f"{r['prefill_flops_per_tok']/1e6:.1f} MFLOPs/tok){extra}")
 
 
 if __name__ == "__main__":

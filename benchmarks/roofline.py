@@ -22,11 +22,10 @@ from __future__ import annotations
 
 import glob
 import json
-import os
 
 from repro.configs import SHAPES, get_config
 from repro.core import costmodel as cm
-from repro.models.model import active_params, num_params
+from repro.models.model import active_params
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9

@@ -3,10 +3,9 @@
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config, scale_down
+from repro.configs import get_config
 from repro.core import costmodel as cm
 from repro.core.autosearch import autosearch, throughput_estimate
 from repro.models import model

@@ -13,7 +13,6 @@ target of this repo (197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional
 
 from repro.configs.base import ATTN, ModelConfig

@@ -8,7 +8,7 @@ carry the *bottleneck resource*; durations come from the cost model profiles.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Optional
+from typing import Optional
 
 COMPUTE, MEMORY, NETWORK = "compute", "memory", "network"
 

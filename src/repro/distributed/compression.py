@@ -8,7 +8,7 @@ tests/test_distributed.py (compression error shrinks vs no-feedback).
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -27,8 +27,6 @@ VMEM per step (bf16): x (bm, K) + w (K, bn) + out (bm, bn)
 from __future__ import annotations
 
 import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

@@ -48,6 +48,14 @@ def _attn_fast() -> bool:
 def flash_attention(q, k, v, *, causal=True, logit_scale=None, q_offset=0,
                     impl: Optional[str] = None):
     impl = _resolve(impl)
+    # The Pallas kernel takes q_offset as a *static* int (chunked prefill
+    # passes a traced per-row offset so one compiled program serves every
+    # prefix depth) and assumes v's head dim equals q/k's (absorbed MLA has
+    # d_qk = rank + rope but d_v = rank) — route both cases to the XLA ref
+    # path, which runs on every backend including TPU.
+    if impl != "ref" and (not isinstance(q_offset, int)
+                          or v.shape[-1] != q.shape[-1]):
+        impl = "ref"
     if impl == "ref":
         if os.environ.get("REPRO_ATTN_STREAM", "0") == "1" and q.shape[1] > 512:
             return _ref.flash_attention_stream(
@@ -65,6 +73,11 @@ def flash_attention(q, k, v, *, causal=True, logit_scale=None, q_offset=0,
 def decode_attention(q, k_cache, v_cache, cache_len, *, logit_scale=None,
                      impl: Optional[str] = None):
     impl = _resolve(impl)
+    # The Pallas kernel assumes v's head dim equals q/k's; absorbed MLA
+    # attends with d_qk = rank + rope but d_v = rank — route the mismatched
+    # case to the XLA ref path (correct on every backend).
+    if impl != "ref" and v_cache.shape[-1] != q.shape[-1]:
+        impl = "ref"
     if impl == "ref":
         fn = _ref.decode_attention_fast if _attn_fast() \
             else _ref.decode_attention_ref

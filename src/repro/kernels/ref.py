@@ -14,6 +14,20 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
+def causal_qmask(sq: int, skv: int, q_offset: int | jax.Array) -> jax.Array:
+    """(B|1, 1, 1, Sq, Skv) causal mask for chunked-prefill attention.
+
+    ``q_offset`` — absolute position of q[0] relative to k[0] — may be a
+    scalar (shared by all batch rows) or a per-row ``(B,)`` array (the
+    engine's incremental prefill runs different slots at different prefix
+    depths).  Broadcasts against ``(B, KV, G, Sq, Skv)`` scores.
+    """
+    qo = jnp.asarray(q_offset, jnp.int32).reshape(-1, 1)          # (B|1, 1)
+    qpos = qo + jnp.arange(sq, dtype=jnp.int32)[None, :]          # (B|1, Sq)
+    kpos = jnp.arange(skv, dtype=jnp.int32)
+    return (qpos[:, :, None] >= kpos[None, None, :])[:, None, None]
+
+
 # ---------------------------------------------------------------------------
 # attention (prefill / train): causal GQA
 # ---------------------------------------------------------------------------
@@ -24,7 +38,7 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     """q: (B, Sq, H, D); k, v: (B, Skv, KV, D) with H = KV * group.
 
     ``q_offset``: absolute position of q[0] relative to k[0] (chunked prefill
-    attends to earlier cache positions non-causally).
+    attends to earlier cache positions non-causally); scalar or per-row (B,).
     """
     b, sq, h, d = q.shape
     _, skv, kv, _ = k.shape
@@ -37,10 +51,7 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     kf = k.astype(jnp.float32)
     scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kf) * scale  # (B,KV,G,Sq,Skv)
     if causal:
-        qpos = jnp.arange(sq)[:, None] + q_offset
-        kpos = jnp.arange(skv)[None, :]
-        mask = qpos >= kpos
-        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        scores = jnp.where(causal_qmask(sq, skv, q_offset), scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
     return out.reshape(b, sq, h, dv).astype(q.dtype)
@@ -107,9 +118,7 @@ def flash_attention_fast(q: jax.Array, k: jax.Array, v: jax.Array, *,
     scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
                         preferred_element_type=jnp.float32) * scale
     if causal:
-        qpos = jnp.arange(sq)[:, None] + q_offset
-        kpos = jnp.arange(skv)[None, :]
-        scores = jnp.where((qpos >= kpos)[None, None, None], scores, NEG_INF)
+        scores = jnp.where(causal_qmask(sq, skv, q_offset), scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
     out = jnp.einsum("bhgqk,bkhv->bqhgv", probs, v,
                      preferred_element_type=jnp.float32)
@@ -163,17 +172,18 @@ def flash_attention_stream(q: jax.Array, k: jax.Array, v: jax.Array, *,
     qg = (q.reshape(b, sq, kv, group, d).astype(jnp.float32) * scale)
     kb = k.reshape(b, nb, blk, kv, d).transpose(1, 0, 2, 3, 4)
     vb = v.reshape(b, nb, blk, kv, dv).transpose(1, 0, 2, 3, 4)
-    qpos = jnp.arange(sq)[:, None] + q_offset
+    qo = jnp.asarray(q_offset, jnp.int32).reshape(-1, 1)          # (B|1, 1)
+    qpos = qo + jnp.arange(sq, dtype=jnp.int32)[None, :]          # (B|1, Sq)
 
     def body(carry, inp):
         m, l, acc = carry
         kc, vc, start = inp                              # (B,blk,KV,*), scalar
         s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kc.astype(jnp.float32))
-        kpos = start + jnp.arange(blk)[None, :]
-        mask = kpos < skv
+        kpos = start + jnp.arange(blk)[None, :]          # (1, blk)
+        mask = jnp.broadcast_to(kpos < skv, qpos.shape[:1] + (sq, blk))
         if causal:
-            mask = mask & (qpos >= kpos)
-        s = jnp.where(mask[None, None, None], s, NEG_INF)
+            mask = mask & (qpos[:, :, None] >= kpos[None])
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
         alpha = jnp.exp(m - m_new)

@@ -15,7 +15,6 @@ Usage:
 """
 import argparse
 import json
-import re
 import sys
 import time
 import traceback
@@ -23,7 +22,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
-from repro.configs import SHAPES, applicable_shapes, get_config, list_configs
+from repro.configs import SHAPES, applicable_shapes, get_config
 from repro.launch.hlo_analysis import analyze_module
 from repro.distributed.sharding import (RULES_LONG_CTX, RULES_TP_DP, use_mesh)
 from repro.launch.mesh import make_production_mesh, tp_size

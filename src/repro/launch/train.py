@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import argparse
 
-import jax
 
 from repro.configs import get_config, scale_down
 from repro.models import model as model_lib

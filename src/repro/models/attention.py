@@ -149,10 +149,41 @@ def gqa_decode(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
     return y, {"k": k_cache, "v": v_cache}
 
 
+def gqa_prefill_chunk(cfg: ModelConfig, p: dict, x: jax.Array,
+                      positions: jax.Array, cache: dict, cache_len: jax.Array):
+    """Incremental chunked prefill (DESIGN.md §7).  x: (B, S_chunk, D);
+    cache_len: (B,) prefix tokens already in the cache.  Writes this chunk's
+    K/V at the prefix offset, then attends the chunk's queries over the full
+    cache with a ``q_offset`` causal mask — positions beyond
+    cache_len + S_chunk are never written yet, so the mask excludes them.
+    Each prompt token is projected exactly once across chunks (O(p) FLOPs
+    instead of the recompute path's O(p²/chunk))."""
+    q, k_new, v_new = _qkv(cfg, p, x, positions)
+    k_cache = _write_seq_at(cache["k"], k_new, cache_len)
+    v_cache = _write_seq_at(cache["v"], v_new, cache_len)
+    k_cache = shard(k_cache, "batch", "kv_seq", "act_kv_heads", None)
+    v_cache = shard(v_cache, "batch", "kv_seq", "act_kv_heads", None)
+    out = ops.flash_attention(q, k_cache, v_cache, causal=True,
+                              q_offset=cache_len)
+    out = shard(out, "batch", "act_seq", "act_heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    y = shard(y, "batch", "act_seq", "embed")
+    return y, {"k": k_cache, "v": v_cache}
+
+
 def _write_at(cache: jax.Array, new: jax.Array, idx: jax.Array) -> jax.Array:
     """cache: (B, S, ...); new: (B, ...); idx: (B,) — per-row dynamic write."""
     def one(c, n, i):
         return jax.lax.dynamic_update_slice(c, n[None], (i,) + (0,) * (c.ndim - 1))
+    return jax.vmap(one)(cache, new, idx)
+
+
+def _write_seq_at(cache: jax.Array, new: jax.Array, idx: jax.Array) -> jax.Array:
+    """cache: (B, S, ...); new: (B, s, ...); idx: (B,) — write the s rows of
+    each batch row at its own offset (partial-prefix write, chunked prefill)."""
+    def one(c, n, i):
+        return jax.lax.dynamic_update_slice(
+            c, n.astype(c.dtype), (i,) + (0,) * (c.ndim - 1))
     return jax.vmap(one)(cache, new, idx)
 
 
@@ -170,8 +201,15 @@ def gqa_cache_axes() -> dict:
 
 
 # ---------------------------------------------------------------------------
-# MLA (DeepSeek-V2): low-rank latent KV; decode runs the absorbed form so the
-# cache holds only (c_kv, k_rope) per token.
+# MLA (DeepSeek-V2): low-rank latent KV; the cache holds only (c_kv, k_rope)
+# per token.  *All* paths (train/prefill, chunked prefill, decode) run the
+# absorbed form: W_uk is folded into the query and W_uv applied after the
+# softmax, so attention runs entirely in the (rank + rope) latent — a GQA
+# with a single shared kv "head".  One association order everywhere means
+# prefill and decode agree to kernel precision; the earlier split (naive
+# per-head prefill vs absorbed decode) rounded differently in bf16, and MoE
+# routing amplified those ulps into expert flips
+# (test_prefill_decode_consistency[deepseek-v2-236b]).
 # ---------------------------------------------------------------------------
 def mla_defs(cfg: ModelConfig, tp: int) -> dict:
     m = cfg.mla
@@ -213,12 +251,28 @@ def _mla_latent(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array):
     return c_kv, k_rope          # (B,S,rank), (B,S,rope_dim)
 
 
+def _mla_q_absorbed(cfg: ModelConfig, p: dict, x: jax.Array,
+                    positions: jax.Array) -> jax.Array:
+    """Absorbed query: q_nope · W_uk folded into the latent.
+    Returns (B, S, H, rank + rope_dim)."""
+    q_nope, q_rope = _mla_q(cfg, p, x, positions)
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["wuk"])
+    return jnp.concatenate([q_lat, q_rope], axis=-1)
+
+
+def _mla_unabsorb(p: dict, out_lat: jax.Array, dtype) -> jax.Array:
+    """probs·c_kv latent context -> per-head values via W_uv.
+    out_lat: (B[, S], H, rank) -> (B[, S], H, v_head_dim)."""
+    return jnp.einsum("...hr,rhk->...hk", out_lat.astype(dtype), p["wuv"])
+
+
 def mla_full(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
              *, q_offset=0, kv_prefix: Optional[tuple] = None,
              return_kv: bool = False):
-    """Naive (non-absorbed) MLA for train/prefill: up-project K/V per head."""
+    """Absorbed MLA for train/prefill: attention over the latent KV with a
+    single shared kv head (group = n_heads)."""
     m = cfg.mla
-    q_nope, q_rope = _mla_q(cfg, p, x, positions)
+    q_abs = _mla_q_absorbed(cfg, p, x, positions)        # (B,S,H,rank+rope)
     c_kv, k_rope = _mla_latent(cfg, p, x, positions)
     if kv_prefix is not None:
         pc, pr, _plen = kv_prefix
@@ -226,16 +280,12 @@ def mla_full(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
         k_rope_all = jnp.concatenate([pr, k_rope], axis=1)
     else:
         c_kv_all, k_rope_all = c_kv, k_rope
-    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv_all, p["wuk"])
-    v = jnp.einsum("bsr,rhk->bshk", c_kv_all, p["wuv"])
-    nh = k_nope.shape[2]
-    k_rope_b = jnp.broadcast_to(k_rope_all[:, :, None, :],
-                                k_rope_all.shape[:2] + (nh, m.qk_rope_dim))
-    q = jnp.concatenate([q_nope, q_rope], axis=-1)
-    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    k_abs = jnp.concatenate([c_kv_all, k_rope_all], axis=-1)[:, :, None, :]
+    v_lat = c_kv_all[:, :, None, :]                      # (B,S,1,rank)
     scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
-    out = ops.flash_attention(q, k, v, causal=True, logit_scale=scale,
-                              q_offset=q_offset)
+    out_lat = ops.flash_attention(q_abs, k_abs, v_lat, causal=True,
+                                  logit_scale=scale, q_offset=q_offset)
+    out = _mla_unabsorb(p, out_lat, x.dtype)
     out = shard(out, "batch", "act_seq", "act_heads", None)
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
     y = shard(y, "batch", "act_seq", "embed")
@@ -246,28 +296,46 @@ def mla_full(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
 
 def mla_decode(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
                cache: dict, cache_len: jax.Array):
-    """Absorbed decode: scores and context computed in the 512-d latent."""
+    """Absorbed decode: scores and context computed in the latent, through
+    the same decode_attention kernel the GQA path uses (KV head = 1)."""
     m = cfg.mla
-    q_nope, q_rope = _mla_q(cfg, p, x, positions)       # (B,1,H,*)
+    q_abs = _mla_q_absorbed(cfg, p, x, positions)        # (B,1,H,rank+rope)
     c_new, r_new = _mla_latent(cfg, p, x, positions)     # (B,1,rank/rope)
     ckv = _write_at(cache["c_kv"], c_new[:, 0], cache_len)
     krp = _write_at(cache["k_rope"], r_new[:, 0], cache_len)
     ckv = shard(ckv, "batch", "kv_seq", None)
-    # absorb W_uk into q: q_lat (B,H,rank)
-    q_lat = jnp.einsum("bhk,rhk->bhr", q_nope[:, 0], p["wuk"])
+    k_abs = jnp.concatenate([ckv, krp], axis=-1)[:, :, None, :]
+    v_lat = ckv[:, :, None, :]
     scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
-    scores = (jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32),
-                         ckv.astype(jnp.float32))
-              + jnp.einsum("bhk,bsk->bhs", q_rope[:, 0].astype(jnp.float32),
-                           krp.astype(jnp.float32))) * scale
-    s_max = ckv.shape[1]
-    valid = jnp.arange(s_max)[None, None, :] < (cache_len + 1)[:, None, None]
-    scores = jnp.where(valid, scores, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1)
-    ctx_lat = jnp.einsum("bhs,bsr->bhr", probs, ckv.astype(jnp.float32))
-    out = jnp.einsum("bhr,rhk->bhk", ctx_lat.astype(x.dtype), p["wuv"])
+    out_lat = ops.decode_attention(q_abs[:, 0], k_abs, v_lat, cache_len + 1,
+                                   logit_scale=scale)
+    out = _mla_unabsorb(p, out_lat, x.dtype)
     out = shard(out, "batch", "act_heads", None)
     y = jnp.einsum("bhk,hkd->bd", out, p["wo"])[:, None, :]
+    y = shard(y, "batch", "act_seq", "embed")
+    return y, {"c_kv": ckv, "k_rope": krp}
+
+
+def mla_prefill_chunk(cfg: ModelConfig, p: dict, x: jax.Array,
+                      positions: jax.Array, cache: dict, cache_len: jax.Array):
+    """Incremental chunked prefill for MLA (DESIGN.md §7): write the chunk's
+    latents at the prefix offset, attend absorbed queries over the latent
+    cache.  No per-head K/V is ever materialized — the prefix cost per chunk
+    is O(S_cache · (rank + rope)), not O(S_cache · heads · head_dim)."""
+    m = cfg.mla
+    q_abs = _mla_q_absorbed(cfg, p, x, positions)        # (B,s,H,rank+rope)
+    c_new, r_new = _mla_latent(cfg, p, x, positions)
+    ckv = _write_seq_at(cache["c_kv"], c_new, cache_len)
+    krp = _write_seq_at(cache["k_rope"], r_new, cache_len)
+    ckv = shard(ckv, "batch", "kv_seq", None)
+    k_abs = jnp.concatenate([ckv, krp], axis=-1)[:, :, None, :]
+    v_lat = ckv[:, :, None, :]
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    out_lat = ops.flash_attention(q_abs, k_abs, v_lat, causal=True,
+                                  logit_scale=scale, q_offset=cache_len)
+    out = _mla_unabsorb(p, out_lat, x.dtype)
+    out = shard(out, "batch", "act_seq", "act_heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
     y = shard(y, "batch", "act_seq", "embed")
     return y, {"c_kv": ckv, "k_rope": krp}
 

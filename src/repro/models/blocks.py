@@ -112,6 +112,34 @@ def block_decode(cfg: ModelConfig, spec: LayerSpec, p: dict, x: jax.Array,
     return x, new_cache
 
 
+def block_chunk(cfg: ModelConfig, spec: LayerSpec, p: dict, x: jax.Array,
+                positions: jax.Array, cache: dict, cache_len: jax.Array):
+    """Incremental chunked prefill (DESIGN.md §7): run a multi-token chunk
+    against the carried cache.  Attention writes the chunk's K/V (latents)
+    at the ``cache_len`` offset and attends over the prefix; recurrent
+    mixers resume from the cached state (cache format == state format).
+    Returns (x, new_cache) — same contract as ``block_decode``."""
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if spec.mixer == ATTN:
+        fn = attn.mla_prefill_chunk if cfg.mla is not None \
+            else attn.gqa_prefill_chunk
+        y, new_cache = fn(cfg, p["mixer"], h, positions, cache, cache_len)
+    elif spec.mixer == MAMBA:
+        y, new_cache = ssm_mod.mamba_full(cfg, p["mixer"], h, initial=cache,
+                                          return_state=True)
+    elif spec.mixer == MLSTM:
+        y, new_cache = xlstm_mod.mlstm_full(cfg, p["mixer"], h, initial=cache,
+                                            return_state=True)
+    elif spec.mixer == SLSTM:
+        y, new_cache = xlstm_mod.slstm_full(cfg, p["mixer"], h, initial=cache,
+                                            return_state=True)
+    else:
+        raise ValueError(spec.mixer)
+    x = x + y
+    x, _aux = _ffn_apply(cfg, spec, p, x)
+    return x, new_cache
+
+
 def block_init_cache(cfg: ModelConfig, spec: LayerSpec, tp: int, batch: int,
                      max_len: int) -> dict:
     if spec.mixer == ATTN:

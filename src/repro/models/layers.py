@@ -93,6 +93,15 @@ def causal_conv1d_step(x_t: jax.Array, conv_state: jax.Array, w: jax.Array,
     return out, window[:, 1:, :]
 
 
+def conv_tail(xs: jax.Array, kk: int) -> jax.Array:
+    """Conv history carry for chunked prefill: last ``kk`` rows of (B, S, C),
+    left-zero-padded when S < kk.  Callers pass (prev history ++ chunk) so
+    chunks shorter than the kernel keep earlier history."""
+    if xs.shape[1] >= kk:
+        return xs[:, xs.shape[1] - kk:, :]
+    return jnp.pad(xs, ((0, 0), (kk - xs.shape[1], 0), (0, 0)))
+
+
 # ---------------------------------------------------------------------------
 # losses / heads
 # ---------------------------------------------------------------------------

@@ -119,46 +119,76 @@ def forward_full(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
                  patches: Optional[jax.Array] = None,
                  positions: Optional[jax.Array] = None,
                  q_offset: int | jax.Array = 0,
+                 initial_states: Optional[list] = None,
                  return_states: bool = False,
                  remat: str = "none"):
     """Returns (logits, aux_loss[, states]).
 
     ``states``: per-group stacked mixer states (KV for attention, recurrent
     state for SSM/LSTM) for handing off to the decode path.
+
+    ``initial_states``: carry state from an earlier chunk, in the exact
+    structure this function returns via ``return_states`` — threading it
+    (plus ``q_offset`` / ``positions`` set to the prefix length) continues a
+    chunked prefill without recomputing the prefix (DESIGN.md §7).  For
+    attention the state holds the prefix KV (latents), which is concatenated
+    before the causal attention; recurrent mixers resume exactly.
     """
     x = _embed(cfg, params, tokens, patches)
     b, s = x.shape[0], x.shape[1]
     if positions is None:
+        # q_offset may be a scalar or per-row (B,) — reshape to a column so
+        # it broadcasts over the sequence axis (matching causal_qmask)
+        qo = jnp.asarray(q_offset, jnp.int32).reshape(-1, 1)
         positions = jnp.arange(s, dtype=jnp.int32)[None, :] + jnp.zeros(
-            (b, 1), jnp.int32)
+            (b, 1), jnp.int32) + qo
     aux = jnp.zeros((), jnp.float32)
     states: list[Any] = []
     for gi, (pattern, reps) in enumerate(cfg.layer_groups()):
         stacked = params[f"group{gi}"]
+        init_g = initial_states[gi] if initial_states is not None else None
 
-        def body(carry, layer_p, _pattern=pattern):
+        def body(carry, xs, _pattern=pattern, _has_init=init_g is not None):
             x, aux = carry
+            layer_p, layer_init = xs if _has_init else (xs, None)
             sts = {}
             for i, spec in enumerate(_pattern):
+                init_i = None
+                if layer_init is not None:
+                    init_i = _state_to_initial(spec, layer_init[f"sub{i}"])
                 if return_states:
                     x, a, st = blocks.block_full(
                         cfg, spec, layer_p[f"sub{i}"], x, positions,
-                        q_offset=q_offset, return_state=True)
+                        q_offset=q_offset, initial=init_i, return_state=True)
                     sts[f"sub{i}"] = st
                 else:
                     x, a = blocks.block_full(cfg, spec, layer_p[f"sub{i}"], x,
-                                             positions, q_offset=q_offset)
+                                             positions, q_offset=q_offset,
+                                             initial=init_i)
                 aux = aux + a
             return (x, aux), (sts if return_states else None)
 
         if remat != "none":
             body = _remat(body, remat)
-        (x, aux), sts = jax.lax.scan(body, (x, aux), stacked)
+        xs = (stacked, init_g) if init_g is not None else stacked
+        (x, aux), sts = jax.lax.scan(body, (x, aux), xs)
         states.append(sts)
     logits = _head(cfg, params, x)
     if return_states:
         return logits, aux, states
     return logits, aux
+
+
+def _state_to_initial(spec, state: dict) -> dict:
+    """Returned-state structure -> ``block_full(initial=...)`` structure.
+    Attention states hold the prefix KV pair under "kv"; block_full expects
+    it as ``kv_prefix`` (the prefix length is implied by the array shape).
+    Recurrent states pass through unchanged (state format == cache format)."""
+    from repro.configs.base import ATTN
+    if spec.mixer == ATTN:
+        pk, pv = state["kv"]
+        return {"kv_prefix": (pk, pv, pk.shape[1])}
+    return state
 
 
 def _remat(body, policy: str):
@@ -267,6 +297,52 @@ def forward_decode(cfg: ModelConfig, params: dict, tokens: jax.Array,
         new_cache.append(nc)
     logits = _head(cfg, params, x)
     return logits[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# forward: incremental prefill chunk against a carried cache
+# ---------------------------------------------------------------------------
+def forward_chunk(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                  cache: list, cache_len: jax.Array):
+    """Incremental chunked prefill (DESIGN.md §7): run ``tokens``
+    (B, S_chunk[, K]) as the next S_chunk prompt positions after the
+    ``cache_len`` (B,) tokens already in ``cache``.
+
+    The multi-token generalization of ``forward_decode``: attention writes
+    the chunk's K/V (latents) into the cache at the prefix offset and
+    attends causally over prefix + chunk; recurrent mixers resume from the
+    cached state.  Each prompt token passes through the model exactly once
+    across chunks — O(p) model FLOPs for a p-token prompt, vs O(p²/chunk)
+    for prefix recomputation.  All shapes are static given the chunk length,
+    so ``jax.jit`` compiles one program per (bucketed) chunk size.
+
+    Per-row ``cache_len`` offsets are supported on the XLA/ref kernel path;
+    the engine calls this one slot at a time (B = 1).
+
+    Returns (logits (B, S_chunk, vocab[, K]), new_cache).
+    """
+    x = _embed(cfg, params, tokens)
+    b, s = x.shape[0], x.shape[1]
+    positions = cache_len[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    new_cache: list = []
+    for gi, (pattern, reps) in enumerate(cfg.layer_groups()):
+        stacked_p = params[f"group{gi}"]
+        stacked_c = cache[gi]
+
+        def body(x, pc, _pattern=pattern):
+            layer_p, layer_c = pc
+            new_c = {}
+            for i, spec in enumerate(_pattern):
+                x, c = blocks.block_chunk(cfg, spec, layer_p[f"sub{i}"], x,
+                                          positions, layer_c[f"sub{i}"],
+                                          cache_len)
+                new_c[f"sub{i}"] = c
+            return x, new_c
+
+        x, nc = jax.lax.scan(body, x, (stacked_p, stacked_c))
+        new_cache.append(nc)
+    logits = _head(cfg, params, x)
+    return logits, new_cache
 
 
 # ---------------------------------------------------------------------------

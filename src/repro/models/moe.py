@@ -13,8 +13,6 @@ dimension from the contraction).
 from __future__ import annotations
 
 import math
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

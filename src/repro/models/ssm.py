@@ -14,7 +14,8 @@ import jax.numpy as jnp
 from repro.configs.base import MambaConfig, ModelConfig
 from repro.kernels import ops
 from repro.kernels.ref import ssm_step_ref
-from repro.models.layers import causal_conv1d, causal_conv1d_step, shard, silu, softplus
+from repro.models.layers import (causal_conv1d, causal_conv1d_step, conv_tail,
+                                 shard, silu, softplus)
 from repro.models.param import ParamDef
 
 
@@ -73,6 +74,7 @@ def mamba_full(cfg: ModelConfig, p: dict, x: jax.Array,
         xc = causal_conv1d(xs_ext, p["conv_w"], p["conv_b"])[:, hist.shape[1]:]
         h0 = initial["ssm"]
     else:
+        xs_ext = xs
         xc = causal_conv1d(xs, p["conv_w"], p["conv_b"])
         h0 = None
     xc = silu(xc)
@@ -83,9 +85,11 @@ def mamba_full(cfg: ModelConfig, p: dict, x: jax.Array,
     out = jnp.einsum("bsk,kd->bsd", y, p["w_out"])
     out = shard(out, "batch", "act_seq", "embed")
     if return_state:
-        conv_state = xs[:, -(mc.d_conv - 1):, :] if xs.shape[1] >= mc.d_conv - 1 \
-            else jnp.pad(xs, ((0, 0), (mc.d_conv - 1 - xs.shape[1], 0), (0, 0)))
-        return out, {"conv": conv_state, "ssm": h_final}
+        # conv history for the next chunk spans the chunk boundary: take the
+        # tail of (prev history ++ chunk), not of the chunk alone — a chunk
+        # shorter than d_conv-1 must keep earlier history, not zero-pad it.
+        return out, {"conv": conv_tail(xs_ext, mc.d_conv - 1),
+                     "ssm": h_final}
     return out
 
 

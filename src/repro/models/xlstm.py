@@ -15,8 +15,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, XLSTMConfig
 from repro.kernels.ref import mlstm_chunk_ref, mlstm_step_ref
-from repro.models.layers import (causal_conv1d, causal_conv1d_step, rmsnorm,
-                                 shard, silu)
+from repro.models.layers import (causal_conv1d, causal_conv1d_step, conv_tail,
+                                 rmsnorm, shard, silu)
 from repro.models.param import ParamDef
 
 
@@ -59,7 +59,8 @@ def mlstm_defs(cfg: ModelConfig, tp: int) -> dict:
 
 def _mlstm_pre(cfg: ModelConfig, p: dict, x: jax.Array,
                conv_hist: Optional[jax.Array] = None):
-    """x: (B,S,D) -> q,k,v (B,S,H,dh), gates (B,S,H), z, new conv tail."""
+    """x: (B,S,D) -> q,k,v (B,S,H,dh), gates (B,S,H), z, conv-input stream
+    (history ++ chunk — the source for the next chunk's conv tail)."""
     d_in, h, dh = _mlstm_dims(cfg)
     xz = jnp.einsum("bsd,dk->bsk", x, p["w_up"])
     xs, z = jnp.split(xz, 2, axis=-1)
@@ -67,6 +68,7 @@ def _mlstm_pre(cfg: ModelConfig, p: dict, x: jax.Array,
         ext = jnp.concatenate([conv_hist, xs], axis=1)
         xc = causal_conv1d(ext, p["conv_w"], p["conv_b"])[:, conv_hist.shape[1]:]
     else:
+        ext = xs
         xc = causal_conv1d(xs, p["conv_w"], p["conv_b"])
     xc = silu(xc)
     b, s, _ = x.shape
@@ -79,7 +81,7 @@ def _mlstm_pre(cfg: ModelConfig, p: dict, x: jax.Array,
     ig = jnp.einsum("bsk,kh->bsh", xc.astype(jnp.float32), p["w_i"]) + p["b_i"]
     fg = jax.nn.log_sigmoid(
         jnp.einsum("bsk,kh->bsh", xc.astype(jnp.float32), p["w_f"]) + p["b_f"])
-    return q, k, v, ig, fg, z, xs
+    return q, k, v, ig, fg, z, ext
 
 
 def mlstm_chunkwise(q: jax.Array, k: jax.Array, v: jax.Array,
@@ -181,7 +183,7 @@ def mlstm_full(cfg: ModelConfig, p: dict, x: jax.Array,
     d_in, h, dh = _mlstm_dims(cfg)
     hist = initial["conv"] if initial is not None else None
     st0 = (initial["c"], initial["n"], initial["m"]) if initial is not None else None
-    q, k, v, ig, fg, z, xs = _mlstm_pre(cfg, p, x, hist)
+    q, k, v, ig, fg, z, conv_src = _mlstm_pre(cfg, p, x, hist)
     if _mlstm_impl() == "chunkwise" and x.shape[1] >= 8:
         y, state = mlstm_chunkwise(q, k, v, ig, fg, initial=st0)
     else:
@@ -193,11 +195,11 @@ def mlstm_full(cfg: ModelConfig, p: dict, x: jax.Array,
     out = jnp.einsum("bsk,kd->bsd", y, p["w_down"])
     out = shard(out, "batch", "act_seq", "embed")
     if return_state:
-        kk = xc.conv_kernel - 1
-        conv_state = xs[:, -kk:, :] if xs.shape[1] >= kk \
-            else jnp.pad(xs, ((0, 0), (kk - xs.shape[1], 0), (0, 0)))
+        # conv_src is (prev history ++ chunk) — the stream the conv actually
+        # consumed — so short chunks keep earlier history in the tail
         c_f, n_f, m_f = state
-        return out, {"conv": conv_state, "c": c_f, "n": n_f, "m": m_f}
+        return out, {"conv": conv_tail(conv_src, xc.conv_kernel - 1),
+                     "c": c_f, "n": n_f, "m": m_f}
     return out
 
 
@@ -301,6 +303,7 @@ def slstm_full(cfg: ModelConfig, p: dict, x: jax.Array,
         xconv = causal_conv1d(ext, p["conv_w"], p["conv_b"])[:, initial["conv"].shape[1]:]
         state = (initial["c"], initial["n"], initial["h"], initial["m"])
     else:
+        ext = x
         xconv = causal_conv1d(x, p["conv_w"], p["conv_b"])
         b, d = x.shape[0], cfg.d_model
         state = (jnp.zeros((b, d), jnp.float32), jnp.zeros((b, d), jnp.float32),
@@ -319,11 +322,11 @@ def slstm_full(cfg: ModelConfig, p: dict, x: jax.Array,
     out = jnp.einsum("bsf,fd->bsd", yf, p["w_ffn_down"])
     out = shard(out, "batch", "act_seq", "embed")
     if return_state:
-        kk = xc.slstm_conv_kernel - 1
-        conv_state = x[:, -kk:, :] if x.shape[1] >= kk \
-            else jnp.pad(x, ((0, 0), (kk - x.shape[1], 0), (0, 0)))
+        # ext is (prev history ++ chunk) — the stream the conv actually
+        # consumed — so short chunks keep earlier history in the tail
         c, n, hs, m = carry
-        return out, {"conv": conv_state, "c": c, "n": n, "h": hs, "m": m}
+        return out, {"conv": conv_tail(ext, xc.slstm_conv_kernel - 1),
+                     "c": c, "n": n, "h": hs, "m": m}
     return out
 
 

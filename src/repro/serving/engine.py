@@ -3,13 +3,26 @@
 Slot-based execution: the decode path runs over a fixed-capacity slot array
 (static shapes — one compiled program; the paper's discrete-batching insight
 applied to the XLA compilation cache).  Prefill runs in chunks (chunked
-prefill, §4.2) whose KV states are scattered into the request's slot.
+prefill, §4.2) whose KV states are written into the request's slot.
+
+Chunked prefill is *incremental* (DESIGN.md §7): each chunk runs
+``model.forward_chunk`` against the slot's carried cache — attention K/V
+(latents) are written at the prefix offset, recurrent mixers resume from
+their cached state — so every prompt token passes through the model exactly
+once (O(p) FLOPs for a p-token prompt).  The chunk step is jitted with
+*bucketed* chunk lengths: the scheduler quantizes chunk lengths to its
+discrete sizes, so the XLA compile cache is bounded by
+``len(discrete_sizes) + chunk_min - 1`` programs.  The pre-refactor
+recompute path (re-run ``forward_full`` over ``[0, upto)`` per chunk,
+O(p²/chunk) FLOPs) is kept as ``prefill_mode="recompute"`` for A/B
+benchmarking.
 
 Iteration order: decode first, then prefill.  The decode step executes over
-*all* slots (static shape); slots that are mid-prefill get a garbage write at
-their next position, which the subsequent prefill scatter overwrites — this
-mirrors NanoFlow's asynchronous top-level scheduling where batch formation
-for iteration i+1 happens before iteration i's results are inspected (§5.3).
+*all* slots (static shape); mid-prefill slots are masked out of the cache
+update (``active``), so their carried prefill state is never perturbed —
+this mirrors NanoFlow's asynchronous top-level scheduling where batch
+formation for iteration i+1 happens before iteration i's results are
+inspected (§5.3).
 
 On TPU the per-iteration program is the NanoFlow pipeline (nano-batched,
 overlapped ops); on this CPU container the same engine logic drives the ref
@@ -37,9 +50,14 @@ from repro.serving.scheduler import BatchPlan, GlobalBatchScheduler
 @dataclasses.dataclass
 class EngineStats:
     iterations: int = 0
-    prefill_tokens: int = 0
+    prefill_tokens: int = 0          # prompt tokens admitted to the cache
+    prefill_model_tokens: int = 0    # token-positions actually run through
+    #                                  the model during prefill: == prefill
+    #                                  _tokens on the incremental path (O(p)),
+    #                                  strictly greater on the recompute path
     decode_tokens: int = 0
     wall_time: float = 0.0
+    prefill_time: float = 0.0
     dense_batch_hist: dict = dataclasses.field(default_factory=dict)
 
     @property
@@ -50,6 +68,12 @@ class EngineStats:
     def throughput(self) -> float:
         return self.total_tokens / self.wall_time if self.wall_time else 0.0
 
+    @property
+    def prefill_expansion(self) -> float:
+        """Model-token-positions per prompt token (1.0 == linear prefill)."""
+        return (self.prefill_model_tokens / self.prefill_tokens
+                if self.prefill_tokens else 0.0)
+
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 8,
@@ -57,11 +81,14 @@ class ServeEngine:
                  total_pages: Optional[int] = None,
                  avg_decode_len: float = 64.0,
                  discrete_sizes: tuple[int, ...] = (256, 128, 64, 32, 16, 8),
+                 prefill_mode: str = "incremental",
                  seed: int = 0):
+        assert prefill_mode in ("incremental", "recompute"), prefill_mode
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
         self.max_len = max_len
+        self.prefill_mode = prefill_mode
         self.key = jax.random.PRNGKey(seed)
 
         hd = cfg.resolved_head_dim
@@ -80,14 +107,57 @@ class ServeEngine:
         self.slot_free = list(range(max_slots))
         self.stats = EngineStats()
 
+        # fresh one-slot cache, scattered into a slot on (re)assignment so a
+        # reused slot never leaks the previous request's recurrent state
+        self._slot_init = model_lib.init_cache(cfg, 1, 1, max_len)
+
         self._decode_step = jax.jit(self._decode_impl, donate_argnums=(1,))
+        # one compiled program per bucketed chunk length (scheduler-quantized)
+        self._prefill_step = jax.jit(self._prefill_impl, donate_argnums=(1,))
+        self._reset_step = jax.jit(_reset_slot, donate_argnums=(0,))
 
     # ---- jitted decode over all slots (static shapes) -----------------------
-    def _decode_impl(self, params, cache, tokens, cache_len):
+    def _decode_impl(self, params, cache, tokens, cache_len, active):
         logits, new_cache = model_lib.forward_decode(
             self.cfg, params, tokens, cache, cache_len)
         next_tok = sampling.greedy(logits)
-        return next_tok, new_cache
+        # Mask the *recurrent* state update to decoding slots: a mid-prefill
+        # slot's carried SSM/LSTM state must not be advanced by its garbage
+        # decode token.  Attention K/V leaves keep the donated in-place
+        # update: the garbage row lands at the slot's cache_len, which the
+        # next prefill chunk overwrites before attending — selecting the big
+        # seq-dim leaves would force a full cache copy per decode step.
+        def sel(n, o):
+            m = active.reshape((1, -1) + (1,) * (n.ndim - 2))
+            return jnp.where(m, n, o)
+        out = []
+        for gi, (pattern, reps) in enumerate(self.cfg.layer_groups()):
+            g = {}
+            for i, spec in enumerate(pattern):
+                n_sub = new_cache[gi][f"sub{i}"]
+                g[f"sub{i}"] = n_sub if spec.mixer == ATTN else jax.tree.map(
+                    sel, n_sub, cache[gi][f"sub{i}"])
+            out.append(g)
+        return next_tok, out
+
+    # ---- jitted incremental prefill chunk (one slot, bucketed length) -------
+    def _prefill_impl(self, params, cache, tokens, slot, offset):
+        """tokens: (1, L[, K]) — the next L prompt positions of ``slot``
+        after an ``offset``-token prefix.  Gathers the slot's sub-cache,
+        runs ``forward_chunk``, scatters the updated sub-cache back
+        (partial-prefix write at an arbitrary offset).  ``slot`` and
+        ``offset`` are traced, so one compiled program serves every slot and
+        prefix depth of a given chunk length."""
+        sub = jax.tree.map(
+            lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1),
+            cache)
+        logits, new_sub = model_lib.forward_chunk(
+            self.cfg, params, tokens, sub, offset[None])
+        new_cache = jax.tree.map(
+            lambda c, s: jax.lax.dynamic_update_slice_in_dim(
+                c, s.astype(c.dtype), slot, axis=1),
+            cache, new_sub)
+        return sampling.greedy(logits[:, -1]), new_cache
 
     # ---- public API ----------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -124,7 +194,8 @@ class ServeEngine:
                 tok_in = jnp.repeat(tok_in[..., None], self.cfg.num_codebooks,
                                     axis=-1)
             next_tok, self.cache = self._decode_step(
-                self.params, self.cache, tok_in, self.cache_len)
+                self.params, self.cache, tok_in, self.cache_len,
+                jnp.asarray(active))
             self.cache_len = self.cache_len + jnp.asarray(active, jnp.int32)
             nt = np.asarray(next_tok)
             for r in decode_reqs:
@@ -132,16 +203,26 @@ class ServeEngine:
                 sampled[r.rid] = int(t) if np.ndim(t) == 0 else int(t.flat[0])
             self.stats.decode_tokens += len(decode_reqs)
 
-        # ---- chunked prefill (overwrites any garbage decode writes) ----------
+        # ---- chunked prefill -------------------------------------------------
+        t_prefill = time.perf_counter()
         for chunk in plan.prefill:
             r = chunk.req
             if r.slot < 0:
                 assert self.slot_free, "scheduler admitted beyond slot capacity"
                 r.slot = self.slot_free.pop()
-            last_tok = self._prefill_to(r, chunk.offset + chunk.length)
+                if self.prefill_mode == "incremental":
+                    self.cache = self._reset_step(
+                        self.cache, self._slot_init, jnp.int32(r.slot))
+            if self.prefill_mode == "incremental":
+                last_tok = self._prefill_chunk(r, chunk.offset, chunk.length)
+                self.stats.prefill_model_tokens += chunk.length
+            else:
+                last_tok = self._prefill_to(r, chunk.offset + chunk.length)
+                self.stats.prefill_model_tokens += chunk.offset + chunk.length
             self.stats.prefill_tokens += chunk.length
             if chunk.offset + chunk.length == r.prompt_len:
                 sampled[r.rid] = last_tok
+        self.stats.prefill_time += time.perf_counter() - t_prefill
 
         finished = self.scheduler.commit(plan, sampled, now)
         for r in finished:
@@ -149,13 +230,27 @@ class ServeEngine:
         return finished
 
     # ---- internals -----------------------------------------------------------
+    def _prefill_chunk(self, r: Request, offset: int, length: int) -> int:
+        """Incremental path: run exactly ``length`` new prompt tokens against
+        the slot's carried cache (O(length) model FLOPs)."""
+        toks = np.asarray(r.prompt[offset:offset + length], np.int32)[None]
+        tok_in = jnp.asarray(toks)
+        if self.cfg.frontend == "audio":
+            tok_in = jnp.repeat(tok_in[..., None], self.cfg.num_codebooks,
+                                axis=-1)
+        next_tok, self.cache = self._prefill_step(
+            self.params, self.cache, tok_in, jnp.int32(r.slot),
+            jnp.int32(offset))
+        self.cache_len = self.cache_len.at[r.slot].set(offset + length)
+        t = np.asarray(next_tok)
+        return int(t) if t.ndim == 0 else int(t.flat[0])
+
     def _prefill_to(self, r: Request, upto: int) -> int:
-        """(Re)compute the prompt prefix [0, upto) and scatter its states into
-        the request's slot.  Chunked prefill keeps the *dense batch* bounded
-        per iteration (the scheduler's job); the engine recomputes the prefix
-        per chunk — O(p²/chunk) FLOPs, correct for every mixer family.  The
-        TPU path instead threads kv_prefix/initial states (models/blocks.py
-        supports both); see DESIGN.md §7."""
+        """Recompute path (``prefill_mode="recompute"``; pre-DESIGN.md-§7
+        behaviour, kept for A/B benchmarks): re-run ``forward_full`` over the
+        whole prefix [0, upto) and scatter its states into the request's
+        slot — O(p²/chunk) FLOPs per prompt, correct for every mixer
+        family."""
         cfg = self.cfg
         toks = np.asarray(r.prompt[:upto], np.int32)[None]
         tok_in = jnp.asarray(toks)
@@ -169,6 +264,10 @@ class ServeEngine:
         return int(last.argmax(-1)) if last.ndim == 1 else int(last.argmax(-1).flat[0])
 
     def _scatter_states(self, slot: int, states) -> None:
+        """Write per-layer mixer states into a slot (recompute path: the
+        whole prefix at offset 0).  The incremental path's partial-prefix
+        writes at arbitrary offsets happen inside the jitted
+        ``_prefill_impl`` via ``attention._write_seq_at``."""
         for gi, (pattern, reps) in enumerate(self.cfg.layer_groups()):
             for i, spec in enumerate(pattern):
                 st = states[gi][f"sub{i}"]
@@ -177,7 +276,8 @@ class ServeEngine:
                     if self.cfg.mla is not None:
                         ck, kr = st["kv"]
                         dst["c_kv"] = _write_slot_seq(dst["c_kv"], ck, slot)
-                        dst["k_rope"] = _write_slot_seq(dst["k_rope"], kr, slot)
+                        dst["k_rope"] = _write_slot_seq(dst["k_rope"], kr,
+                                                        slot)
                     else:
                         k, v = st["kv"]
                         dst["k"] = _write_slot_seq(dst["k"], k, slot)
@@ -197,6 +297,14 @@ class ServeEngine:
         # offload KV for multi-round reuse (byte-accurate accounting)
         kv_elems = max(r.total_tokens * self.kv.bytes_per_token // 4, 1)
         self.kv.offload(r.rid, np.zeros((kv_elems,), np.float32))
+
+
+def _reset_slot(cache, init, slot):
+    """Scatter a fresh one-slot cache into ``slot`` of the full cache."""
+    return jax.tree.map(
+        lambda c, z: jax.lax.dynamic_update_slice_in_dim(
+            c, z.astype(c.dtype), slot, axis=1),
+        cache, init)
 
 
 def _write_slot_seq(cache: jax.Array, chunk: jax.Array, slot: int) -> jax.Array:

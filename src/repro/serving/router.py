@@ -18,8 +18,6 @@ the same logic drives real pods on a cluster.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
-
 from repro.distributed.elastic import StragglerMitigator
 from repro.serving.request import Request, State
 

@@ -45,7 +45,11 @@ class GlobalBatchScheduler:
         self.kv = kv
         self.sizes = tuple(sorted(discrete_sizes, reverse=True))
         self.max_active = max_active
-        self.chunk_min = prefill_chunk_min
+        # chunk lengths are quantized to the discrete sizes; raising the
+        # floor to the smallest size means the only unbucketed lengths are
+        # terminal remainders < chunk_min, keeping the engine's jit compile
+        # cache bounded by len(sizes) + chunk_min - 1 programs
+        self.chunk_min = max(prefill_chunk_min, self.sizes[-1])
         self.waiting: deque[Request] = deque()
         self.active: list[Request] = []
 
@@ -72,6 +76,21 @@ class GlobalBatchScheduler:
                 return s
         return self.sizes[-1]
 
+    def _quantize_chunk(self, want: int) -> int:
+        """Round a prefill chunk length down to a discrete size.
+
+        The engine's jitted prefill step compiles one program per chunk
+        length; quantizing to the discrete set bounds the XLA compile cache
+        (the paper's discrete-batching insight applied to prefill).  The
+        only lengths that fall through are terminal remainders below the
+        smallest discrete size (``chunk_min`` is floored at that size in
+        ``__init__``), so the cache stays bounded by
+        ``len(sizes) + chunk_min - 1`` entries."""
+        for s in self.sizes:
+            if s <= want:
+                return s
+        return want
+
     # ---- per-iteration plan --------------------------------------------------
     def plan(self) -> Optional[BatchPlan]:
         self._admit()
@@ -88,7 +107,7 @@ class GlobalBatchScheduler:
         for r in prefilling:
             if budget < min(self.chunk_min, r.prefill_remaining):
                 break
-            take = min(budget, r.prefill_remaining)
+            take = self._quantize_chunk(min(budget, r.prefill_remaining))
             chunks.append(PrefillChunk(req=r, offset=r.prefill_done, length=take))
             budget -= take
         return BatchPlan(decode=decode, prefill=chunks, dense_batch=dense)

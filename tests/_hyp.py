@@ -1,0 +1,45 @@
+"""Optional-hypothesis shim.
+
+``hypothesis`` is a declared dev dependency (pyproject ``[dev]``; CI installs
+it), but test *collection* must never hard-fail without it — property-based
+tests skip cleanly instead.  Import from here rather than from ``hypothesis``
+directly:
+
+    from _hyp import given, settings, st
+
+When hypothesis is missing, ``given`` replaces the test with a zero-argument
+function that calls ``pytest.skip`` (a plain ``pytest.importorskip`` at
+module scope would skip the module's non-property tests too, which this shim
+keeps runnable).
+"""
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # pragma: no cover - exercised only without dep
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategies:
+        """Stand-in for ``hypothesis.strategies``: any strategy constructor
+        returns an inert placeholder (never executed — the test skips)."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategies()
+
+    def settings(*a, **k):
+        return lambda fn: fn
+
+    def given(*a, **k):
+        def deco(fn):
+            # *args absorbs ``self`` for test methods; no named parameters,
+            # so pytest resolves no fixtures before the skip fires
+            def _skipped(*_args):
+                pytest.skip("hypothesis not installed (pyproject [dev] dep)")
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+        return deco

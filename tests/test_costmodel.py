@@ -1,9 +1,8 @@
 """Cost-model tests: reproduction of the paper's published numbers +
 hypothesis property tests of the §3 equations."""
-import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.configs import get_config
 from repro.core import costmodel as cm

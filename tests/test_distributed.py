@@ -22,12 +22,35 @@ from repro.models import model
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
+# version-adaptive shard_map: the top-level ``jax.shard_map`` (and its
+# ``check_vma`` kwarg / ``jax.sharding.AxisType``) only exist on newer jax;
+# older releases expose ``jax.experimental.shard_map.shard_map`` with
+# ``check_rep``.  Prepended to every subprocess snippet.
+SMAP_COMPAT = """
+    import inspect
+    import jax
+    try:
+        from jax.experimental.shard_map import shard_map as _smap
+    except ImportError:
+        _smap = jax.shard_map
+    _relax = next(kw for kw in ("check_rep", "check_vma")
+                  if kw in inspect.signature(_smap).parameters)
+
+    def smap(f, mesh, in_specs, out_specs, check=True):
+        kw = {} if check else {_relax: False}
+        return _smap(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     **kw)
+"""
+
+
 def run_subprocess(code: str, devices: int = 8) -> str:
     env = dict(os.environ,
                XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
                PYTHONPATH=SRC)
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, env=env, timeout=560)
+    out = subprocess.run(
+        [sys.executable, "-c",
+         textwrap.dedent(SMAP_COMPAT) + textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=560)
     assert out.returncode == 0, out.stderr[-3000:]
     return out.stdout
 
@@ -38,23 +61,19 @@ def test_collective_matmuls_multi_device():
         from jax.sharding import PartitionSpec as P
         from repro.distributed.collective_matmul import (
             allgather_matmul, matmul_reduce_scatter, matmul_allreduce)
-        mesh = jax.make_mesh((8,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jax.make_mesh((8,), ("model",))
         rng = np.random.default_rng(0)
         x = jnp.asarray(rng.normal(size=(16, 64)), jnp.float32)
         w = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
-        f = jax.jit(jax.shard_map(lambda a, b: allgather_matmul(a, b, "model"),
-            mesh=mesh, in_specs=(P(None, "model"), P(None, "model")),
-            out_specs=P(None, "model")))
+        f = jax.jit(smap(lambda a, b: allgather_matmul(a, b, "model"),
+            mesh, (P(None, "model"), P(None, "model")), P(None, "model")))
         assert float(jnp.abs(f(x, w) - x @ w).max()) < 1e-4
-        g = jax.jit(jax.shard_map(
-            lambda a, b: matmul_reduce_scatter(a, b, "model"),
-            mesh=mesh, in_specs=(P(None, "model"), P("model", None)),
-            out_specs=P(None, "model")))
+        g = jax.jit(smap(lambda a, b: matmul_reduce_scatter(a, b, "model"),
+            mesh, (P(None, "model"), P("model", None)), P(None, "model")))
         assert float(jnp.abs(g(x, w) - x @ w).max()) < 1e-4
-        h = jax.jit(jax.shard_map(lambda a, b: matmul_allreduce(a, b, "model"),
-            mesh=mesh, in_specs=(P(None, "model"), P("model", None)),
-            out_specs=P(None, None), check_vma=False))
+        h = jax.jit(smap(lambda a, b: matmul_allreduce(a, b, "model"),
+            mesh, (P(None, "model"), P("model", None)), P(None, None),
+            check=False))
         assert float(jnp.abs(h(x, w) - x @ w).max()) < 1e-4
         print("OK")
     """)
@@ -67,17 +86,15 @@ def test_compressed_psum_error_feedback():
         from jax.sharding import PartitionSpec as P
         from repro.distributed.compression import (
             compressed_psum, compress_state_init, plain_psum)
-        mesh = jax.make_mesh((4,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jax.make_mesh((4,), ("pod",))
         rng = np.random.default_rng(0)
         g = jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)  # per-pod rows
 
         def exchange(gs, rs):
             return compressed_psum({"w": gs}, {"w": rs}, "pod")
 
-        f = jax.jit(jax.shard_map(exchange, mesh=mesh,
-            in_specs=(P("pod"), P("pod")), out_specs=(P("pod"), P("pod")),
-            check_vma=False))
+        f = jax.jit(smap(exchange, mesh,
+            (P("pod"), P("pod")), (P("pod"), P("pod")), check=False))
         # accumulated compressed means track the true mean (error feedback)
         true_mean = np.asarray(g).mean(axis=0)
         res = jnp.zeros_like(g)

@@ -3,7 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.core.nanobatch import (NanoBatchPlan, interleaved_apply, merge,
                                   nano_batch_sizes_for, split)

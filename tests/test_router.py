@@ -1,5 +1,4 @@
 """Multi-replica router: load balance, straggler skew, failure re-dispatch."""
-import numpy as np
 import pytest
 
 from repro.serving.request import Request

@@ -1,18 +1,17 @@
 """Serving-engine tests: end-to-end correctness vs naive decoding, scheduler
 invariants (hypothesis), KV manager accounting, async EOS semantics."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.configs import get_config
 from repro.models import model
 from repro.serving.engine import ServeEngine
 from repro.serving.kvcache import PagedKVManager
-from repro.serving.request import Request, State
+from repro.serving.request import Request
 from repro.serving.scheduler import GlobalBatchScheduler
 
 

@@ -1,14 +1,13 @@
 """End-to-end system behaviour tests (replaces the scaffold placeholder):
 the full NanoFlow loop — cost model -> autosearch plan -> engine run —
 plus model-level semantics the paper depends on."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import SHAPES, applicable_shapes, get_config, scale_down
+from repro.configs import SHAPES, applicable_shapes, get_config
 from repro.core import costmodel as cm
 from repro.core.autosearch import autosearch, throughput_estimate
 from repro.models import model
