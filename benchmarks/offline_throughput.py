@@ -62,24 +62,39 @@ def _submit_workload(eng, name: str, p: int, d: int, n_requests: int,
                            max_new_tokens=min(dlen, 32)))
 
 
-def engine_measured(n_requests: int = 12) -> list[dict]:
-    """Real engine runs, A/B-ing the incremental chunked-prefill path
-    (O(p) model FLOPs per prompt, DESIGN.md §7) against the legacy
-    prefix-recompute path (O(p²/chunk)).  Each mode runs the workload twice
-    and reports the second pass, so XLA compile time (which differs between
-    the modes' compile-cache footprints) doesn't pollute the A/B.
-    ``prefill_flops_per_tok`` uses the 2·N_active forward rule scaled by the
-    measured model-token expansion."""
+# step-mode A/B matrix (DESIGN.md §8): the token-packed single-dispatch
+# step vs the legacy decode-then-per-chunk step, plus the O(p²/chunk)
+# recompute baseline
+ENGINE_MODES = [
+    ("packed", {"step_mode": "packed"}),
+    ("legacy", {"step_mode": "legacy"}),
+    ("recompute", {"step_mode": "legacy", "prefill_mode": "recompute"}),
+]
+
+
+def engine_measured(n_requests: int = 16) -> list[dict]:
+    """Real engine runs, A/B-ing the token-packed single-dispatch step
+    (DESIGN.md §8) against the legacy decode + per-chunk step, and both
+    against the prefix-recompute baseline (O(p²/chunk), DESIGN.md §7).
+    Each mode runs the workload twice and reports the second (warmed) pass,
+    so XLA compile time — which differs between the modes' compile-cache
+    footprints — doesn't pollute the A/B.  Reported per mode: tokens/s,
+    dispatches/iteration, host syncs/iteration, prefill expansion, and the
+    packed step's bucketing-padding fraction."""
     cfg = get_config("tiny-toy")
     params = model.init(cfg, jax.random.PRNGKey(0))
     flops_fwd = 2 * model.active_params(cfg)
     rows = []
-    for name, p, d in [("sharegpt-like", 12, 16), ("const", 16, 8)]:
+    # prompt:decode ratios scaled from the paper's workloads (splitwise
+    # 1155:211 ≈ 5:1 prefill-heavy, sharegpt 246:322 decode-leaning); 8
+    # slots so iterations carry several concurrent prefill chunks — the
+    # dense-batch regime where the legacy step pays 1 + K dispatches
+    for name, p, d in [("splitwise-like", 40, 8), ("sharegpt-like", 12, 16)]:
         per_mode: dict[str, dict] = {}
-        for mode in ("incremental", "recompute"):
-            eng = ServeEngine(cfg, params, max_slots=4, max_len=128,
+        for mode, kwargs in ENGINE_MODES:
+            eng = ServeEngine(cfg, params, max_slots=8, max_len=128,
                               discrete_sizes=(64, 32, 16, 8),
-                              avg_decode_len=d, prefill_mode=mode)
+                              avg_decode_len=d, **kwargs)
             # warmup pass: same length mix -> compiles every program shape
             _submit_workload(eng, name, p, d, n_requests, cfg.vocab_size, 0)
             eng.run()
@@ -93,39 +108,63 @@ def engine_measured(n_requests: int = 12) -> list[dict]:
             st = eng.stats
             tokens = st.total_tokens - warm.total_tokens
             wall = st.wall_time - warm.wall_time
+            iters = st.iterations - warm.iterations
             prefill_tok = st.prefill_tokens - warm.prefill_tokens
             model_tok = st.prefill_model_tokens - warm.prefill_model_tokens
             expansion = model_tok / max(prefill_tok, 1)
-            prefill_s = st.prefill_time - warm.prefill_time
+            pad = st.packed_pad_tokens - warm.packed_pad_tokens
             per_mode[mode] = {
                 "bench": "offline_throughput_engine",
                 "case": f"tiny-toy/{name}/{mode}",
                 "finished": len(done),
                 "tokens": tokens,
                 "tok_s_cpu": round(tokens / max(wall, 1e-9), 1),
-                "iters": st.iterations - warm.iterations,
-                "_prefill_s_raw": prefill_s,       # unrounded, for the ratio
-                "prefill_s": round(prefill_s, 3),
+                "_tok_s_raw": tokens / max(wall, 1e-9),
+                "iters": iters,
+                "dispatches_per_iter": round(
+                    (st.model_dispatches - warm.model_dispatches)
+                    / max(iters, 1), 3),
+                "host_syncs_per_iter": round(
+                    (st.host_syncs - warm.host_syncs) / max(iters, 1), 3),
                 "prefill_expansion": round(expansion, 3),
                 "prefill_flops_per_tok": round(flops_fwd * expansion),
+                "pad_fraction": round(pad / max(tokens + pad, 1), 3),
             }
-        inc, rec = per_mode["incremental"], per_mode["recompute"]
-        inc["prefill_speedup_vs_recompute"] = round(
-            rec.pop("_prefill_s_raw") / max(inc.pop("_prefill_s_raw"), 1e-9),
+        pk, leg = per_mode["packed"], per_mode["legacy"]
+        pk["speedup_vs_legacy"] = round(
+            pk["_tok_s_raw"] / max(leg["_tok_s_raw"], 1e-9), 3)
+        pk["speedup_vs_recompute"] = round(
+            pk["_tok_s_raw"] / max(per_mode["recompute"]["_tok_s_raw"], 1e-9),
             3)
-        rows += [inc, rec]
+        for r in per_mode.values():
+            r.pop("_tok_s_raw")
+        rows += list(per_mode.values())
     return rows
 
 
-def run() -> list[dict]:
-    out = modeled("llama2-70b", cm.A100_80G, 8)
-    out += modeled("qwen3-8b", cm.TPU_V5E, 16)
+def run(engine_only: bool = False) -> list[dict]:
+    out = [] if engine_only else (
+        modeled("llama2-70b", cm.A100_80G, 8)
+        + modeled("qwen3-8b", cm.TPU_V5E, 16))
     out += engine_measured()
     return out
 
 
-def main() -> None:
-    for r in run():
+def main(argv=None) -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine-only", action="store_true",
+                    help="skip the modeled-hardware rows (CI smoke)")
+    ap.add_argument("--json", default=None,
+                    help="also write the rows as a JSON artifact")
+    args = ap.parse_args(argv)
+    rows = run(engine_only=args.engine_only)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
+    for r in rows:
         if r["bench"] == "offline_throughput_model":
             print(f"fig10/{r['case']},0.0,"
                   f"nano={r['nanoflow_tok_s_dev']} seq={r['sequential_tok_s_dev']} "
@@ -133,13 +172,15 @@ def main() -> None:
                   f"{r['speedup']}x)")
         else:
             extra = ""
-            if "prefill_speedup_vs_recompute" in r:
-                extra = (f" prefill {r['prefill_s']}s "
-                         f"({r['prefill_speedup_vs_recompute']}x vs recompute)")
+            if "speedup_vs_legacy" in r:
+                extra = (f" [{r['speedup_vs_legacy']}x vs legacy, "
+                         f"{r['speedup_vs_recompute']}x vs recompute]")
             print(f"fig10/{r['case']},0.0,{r['tok_s_cpu']} tok/s CPU "
                   f"({r['tokens']} tokens, {r['iters']} iters, "
+                  f"{r['dispatches_per_iter']} disp/it, "
+                  f"{r['host_syncs_per_iter']} sync/it, "
                   f"{r['prefill_expansion']}x prefill work, "
-                  f"{r['prefill_flops_per_tok']/1e6:.1f} MFLOPs/tok){extra}")
+                  f"pad {r['pad_fraction']}){extra}")
 
 
 if __name__ == "__main__":

@@ -43,6 +43,23 @@ class NanoBatchPlan:
             acc += s
         return tuple(out)
 
+    def assign_segments(self, lengths: Sequence[int]) -> tuple[int, ...]:
+        """Map packed-stream segments (contiguous per-request token runs,
+        laid out in order) to nano-batches: segment i belongs to the
+        nano-batch containing its first token.  Recorded on ``PackedPlan``
+        as observability for the TPU overlap path (which launches per
+        nano-batch); the CPU ref path launches the stream whole, with its
+        layout fixed by ``packed_segment_order``."""
+        bounds = self.offsets + (sum(self.sizes),)
+        out, pos = [], 0
+        for ln in lengths:
+            nb = 0
+            while nb + 1 < len(self.sizes) and pos >= bounds[nb + 1]:
+                nb += 1
+            out.append(nb)
+            pos += ln
+        return tuple(out)
+
 
 def split(x: jax.Array, plan: NanoBatchPlan, axis: int = 0) -> list[jax.Array]:
     assert x.shape[axis] == sum(plan.sizes), (x.shape, plan)
@@ -73,6 +90,29 @@ def interleaved_apply(stage_compute: Callable[[jax.Array], jax.Array],
     computed = [stage_compute(c) for c in chunks]
     netted = [stage_network(c) for c in computed]
     return merge(netted, axis)
+
+
+def packed_segment_order(kinds: Sequence[str],
+                         lengths: Sequence[int]) -> tuple[int, ...]:
+    """Figure-6 interleave order for the segments of a token-packed dense
+    batch (the engine's single-dispatch step, DESIGN.md §8).
+
+    Decode segments are memory-bound (KV-cache reads per token); prefill
+    chunks are compute-bound (dense GEMMs over many tokens).  Issuing the
+    memory-bound segments first and the compute-bound chunks in descending
+    length gives the device scheduler the same dependency-freedom shape as
+    ``interleaved_apply``: the cache reads of nano-batch i overlap the GEMMs
+    of nano-batch i+1.  On the CPU ref path the order fixes the recurrent
+    token-scan order and the stream layout; semantics are order-invariant
+    (tested) because segments only touch their own slot's state.
+
+    kinds: "decode" | "prefill" per segment; lengths: token count per
+    segment.  Returns the permutation of segment indices.
+    """
+    decode = [i for i, k in enumerate(kinds) if k == "decode"]
+    prefill = sorted((i for i, k in enumerate(kinds) if k != "decode"),
+                     key=lambda i: (-lengths[i], i))
+    return tuple(decode + prefill)
 
 
 def nano_batch_sizes_for(total_tokens: int, nano: int,

@@ -88,6 +88,21 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, logit_scale=None,
                                 interpret=(impl == "interpret"))
 
 
+def packed_attention(q, k_cache, v_cache, token_slot, lengths, *,
+                     logit_scale=None, impl: Optional[str] = None):
+    """Segment-masked attention over a token-packed stream (DESIGN.md §8):
+    token t attends rows [0, lengths[t]) of slot ``token_slot[t]``'s cache.
+
+    No Pallas kernel yet — the slot gather + length mask lowers to the same
+    XLA ops as the decode path, so the ref path is used on every backend
+    (a fused Pallas kernel is a follow-up; the call sites won't change)."""
+    _ = _resolve(impl)                       # accepted for dispatch parity
+    fn = _ref.packed_attention_fast if _attn_fast() \
+        else _ref.packed_attention_ref
+    return fn(q, k_cache, v_cache, token_slot, lengths,
+              logit_scale=logit_scale)
+
+
 def paged_decode_attention(q, k_pages, v_pages, page_table, cache_len, *,
                            logit_scale=None, impl: Optional[str] = None):
     impl = _resolve(impl)

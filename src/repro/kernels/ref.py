@@ -81,6 +81,74 @@ def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     return out.reshape(b, h, dv).astype(q.dtype)
 
 
+def packed_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         token_slot: jax.Array, lengths: jax.Array, *,
+                         logit_scale: Optional[float] = None) -> jax.Array:
+    """Segment-masked attention for the token-packed dense-batch step
+    (DESIGN.md §8): every token of a packed ``(T,)`` stream attends its own
+    slot's cache rows ``[0, lengths[t])`` and nothing else.
+
+    q: (T, H, D) packed queries; k_cache/v_cache: (N_slots, S, KV, D/Dv)
+    slot caches (the packed step scatters each token's K/V at its
+    ``(slot, position)`` before calling this); token_slot: (T,) int32 slot
+    per token; lengths: (T,) int32 = position + 1 per token.
+
+    Segments never attend across each other: slot selection restricts each
+    query to its own request's cache, and the length mask is exactly the
+    causal mask because a segment's K/V occupies positions ``[0, pos]``.
+
+    Shape strategy: scores/contexts are computed dense against *all* slots
+    and selected per token, rather than gathering each token's ``(S, ...)``
+    cache — the caches are then read once per einsum instead of once per
+    token (T-fold less traffic; N_slots is small, so the extra FLOPs are
+    noise next to the dense GEMMs).  A fused Pallas kernel would gather
+    block-wise instead; the call sites won't change.
+    """
+    t, h, d = q.shape
+    n, s, kv, _ = k_cache.shape
+    dv = v_cache.shape[-1]
+    group = h // kv
+    scale = logit_scale if logit_scale is not None else d ** -0.5
+
+    qg = q.reshape(t, kv, group, d).astype(jnp.float32)
+    scores_all = jnp.einsum("tkgd,nskd->tnkgs", qg,
+                            k_cache.astype(jnp.float32)) * scale
+    idx = token_slot.reshape(t, 1, 1, 1, 1)
+    scores = jnp.take_along_axis(scores_all, idx, axis=1)[:, 0]  # (T,KV,G,S)
+    valid = jnp.arange(s)[None, :] < lengths[:, None]            # (T,S)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx_all = jnp.einsum("tkgs,nskv->tnkgv", probs,
+                         v_cache.astype(jnp.float32))
+    out = jnp.take_along_axis(ctx_all, idx, axis=1)[:, 0]        # (T,KV,G,Dv)
+    return out.reshape(t, h, dv).astype(q.dtype)
+
+
+def packed_attention_fast(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                          token_slot: jax.Array, lengths: jax.Array, *,
+                          logit_scale: Optional[float] = None) -> jax.Array:
+    """No-upcast variant of ``packed_attention_ref`` (§Perf HC3): same
+    math, bf16 einsum operands with f32 in-register accumulation."""
+    t, h, d = q.shape
+    n, s, kv, _ = k_cache.shape
+    dv = v_cache.shape[-1]
+    group = h // kv
+    scale = logit_scale if logit_scale is not None else d ** -0.5
+
+    qg = q.reshape(t, kv, group, d)
+    scores_all = jnp.einsum("tkgd,nskd->tnkgs", qg, k_cache,
+                            preferred_element_type=jnp.float32) * scale
+    idx = token_slot.reshape(t, 1, 1, 1, 1)
+    scores = jnp.take_along_axis(scores_all, idx, axis=1)[:, 0]
+    valid = jnp.arange(s)[None, :] < lengths[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    ctx_all = jnp.einsum("tkgs,nskv->tnkgv", probs, v_cache,
+                         preferred_element_type=jnp.float32)
+    out = jnp.take_along_axis(ctx_all, idx, axis=1)[:, 0]
+    return out.reshape(t, h, dv).astype(q.dtype)
+
+
 def paged_decode_attention_ref(q: jax.Array, k_pages: jax.Array,
                                v_pages: jax.Array, page_table: jax.Array,
                                cache_len: jax.Array, *,

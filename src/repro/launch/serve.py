@@ -37,6 +37,9 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--step-mode", default="packed",
+                    choices=["packed", "legacy"],
+                    help="packed = one fused dispatch/iteration (DESIGN.md §8)")
     ap.add_argument("--online", action="store_true")
     ap.add_argument("--rate", type=float, default=4.0, help="req/s (poisson)")
     ap.add_argument("--duration", type=float, default=10.0)
@@ -47,7 +50,8 @@ def main() -> None:
     if args.smoke:
         cfg = scale_down(cfg)
     params = model_lib.init(cfg, jax.random.PRNGKey(args.seed))
-    eng = ServeEngine(cfg, params, max_slots=args.slots, max_len=args.max_len)
+    eng = ServeEngine(cfg, params, max_slots=args.slots, max_len=args.max_len,
+                      step_mode=args.step_mode)
     reqs = make_requests(args.requests, cfg.vocab_size, args.seed)
 
     if not args.online:
@@ -77,6 +81,9 @@ def main() -> None:
     print(f"tokens: prefill {st.prefill_tokens} decode {st.decode_tokens} "
           f"total {st.total_tokens}")
     print(f"throughput {st.throughput:.1f} tok/s (CPU ref-path proxy)")
+    print(f"step={eng.step_mode}: {st.dispatches_per_iter:.2f} dispatches/iter, "
+          f"{st.syncs_per_iter:.2f} host syncs/iter, "
+          f"{st.packed_pad_tokens} pad tokens")
     print(f"dense batch histogram: {dict(sorted(st.dense_batch_hist.items()))}")
     print(f"kv offload: {eng.kv.stats.offload_bytes/1e6:.2f} MB aggregated in "
           f"{eng.kv.stats.aggregated_copies} copies")

@@ -171,6 +171,31 @@ def gqa_prefill_chunk(cfg: ModelConfig, p: dict, x: jax.Array,
     return y, {"k": k_cache, "v": v_cache}
 
 
+def gqa_packed(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
+               cache: dict, token_slot: jax.Array, token_wpos: jax.Array):
+    """Token-packed dense-batch step (DESIGN.md §8).  x: (1, T, D) — the
+    iteration's decode tokens and *all* prefill-chunk tokens packed into one
+    stream; positions: (1, T) absolute position of each token in its own
+    request; cache{k,v}: (N_slots, S, KVe, hd) — the *whole* slot cache, not
+    a per-request gather.  Scatters each token's K/V at ``(slot, wpos)``
+    (``wpos == S`` for padding tokens → dropped), then runs segment-masked
+    attention: token t attends rows [0, positions[t]] of its own slot only,
+    which covers the carried prefix *and* same-segment tokens written by
+    this very dispatch."""
+    q, k_new, v_new = _qkv(cfg, p, x, positions)
+    k_cache = cache["k"].at[token_slot, token_wpos].set(
+        k_new[0].astype(cache["k"].dtype), mode="drop")
+    v_cache = cache["v"].at[token_slot, token_wpos].set(
+        v_new[0].astype(cache["v"].dtype), mode="drop")
+    k_cache = shard(k_cache, "batch", "kv_seq", "act_kv_heads", None)
+    v_cache = shard(v_cache, "batch", "kv_seq", "act_kv_heads", None)
+    out = ops.packed_attention(q[0], k_cache, v_cache, token_slot,
+                               positions[0] + 1)
+    y = jnp.einsum("thk,hkd->td", out, p["wo"])[None]
+    y = shard(y, "batch", "act_seq", "embed")
+    return y, {"k": k_cache, "v": v_cache}
+
+
 def _write_at(cache: jax.Array, new: jax.Array, idx: jax.Array) -> jax.Array:
     """cache: (B, S, ...); new: (B, ...); idx: (B,) — per-row dynamic write."""
     def one(c, n, i):
@@ -336,6 +361,32 @@ def mla_prefill_chunk(cfg: ModelConfig, p: dict, x: jax.Array,
     out = _mla_unabsorb(p, out_lat, x.dtype)
     out = shard(out, "batch", "act_seq", "act_heads", None)
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    y = shard(y, "batch", "act_seq", "embed")
+    return y, {"c_kv": ckv, "k_rope": krp}
+
+
+def mla_packed(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
+               cache: dict, token_slot: jax.Array, token_wpos: jax.Array):
+    """Token-packed step for MLA (DESIGN.md §8): scatter each token's
+    latents at ``(slot, wpos)``, attend absorbed queries over the slot's
+    latent cache with the segment/length mask.  Same absorbed association
+    order as every other MLA path."""
+    m = cfg.mla
+    q_abs = _mla_q_absorbed(cfg, p, x, positions)        # (1,T,H,rank+rope)
+    c_new, r_new = _mla_latent(cfg, p, x, positions)
+    ckv = cache["c_kv"].at[token_slot, token_wpos].set(
+        c_new[0].astype(cache["c_kv"].dtype), mode="drop")
+    krp = cache["k_rope"].at[token_slot, token_wpos].set(
+        r_new[0].astype(cache["k_rope"].dtype), mode="drop")
+    ckv = shard(ckv, "batch", "kv_seq", None)
+    k_abs = jnp.concatenate([ckv, krp], axis=-1)[:, :, None, :]
+    v_lat = ckv[:, :, None, :]
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    out_lat = ops.packed_attention(q_abs[0], k_abs, v_lat, token_slot,
+                                   positions[0] + 1, logit_scale=scale)
+    out = _mla_unabsorb(p, out_lat, x.dtype)             # (T,H,v_head)
+    out = shard(out[None], "batch", "act_seq", "act_heads", None)[0]
+    y = jnp.einsum("thk,hkd->td", out, p["wo"])[None]
     y = shard(y, "batch", "act_seq", "embed")
     return y, {"c_kv": ckv, "k_rope": krp}
 

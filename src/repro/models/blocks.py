@@ -140,6 +140,36 @@ def block_chunk(cfg: ModelConfig, spec: LayerSpec, p: dict, x: jax.Array,
     return x, new_cache
 
 
+def block_packed(cfg: ModelConfig, spec: LayerSpec, p: dict, x: jax.Array,
+                 positions: jax.Array, cache: dict, token_slot: jax.Array,
+                 token_wpos: jax.Array, token_active: jax.Array):
+    """Token-packed dense-batch step (DESIGN.md §8): one (1, T) stream
+    holding the iteration's decode tokens and all prefill-chunk tokens with
+    per-token (slot, position) metadata, run against the *whole* slot cache.
+    Attention scatters K/V at (slot, wpos) and applies the segment mask;
+    recurrent mixers advance per-slot state with active-masking.
+    Returns (x, new_cache) over the full slot-state arrays."""
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if spec.mixer == ATTN:
+        fn = attn.mla_packed if cfg.mla is not None else attn.gqa_packed
+        y, new_cache = fn(cfg, p["mixer"], h, positions, cache, token_slot,
+                          token_wpos)
+    elif spec.mixer == MAMBA:
+        y, new_cache = ssm_mod.mamba_packed(cfg, p["mixer"], h, cache,
+                                            token_slot, token_active)
+    elif spec.mixer == MLSTM:
+        y, new_cache = xlstm_mod.mlstm_packed(cfg, p["mixer"], h, cache,
+                                              token_slot, token_active)
+    elif spec.mixer == SLSTM:
+        y, new_cache = xlstm_mod.slstm_packed(cfg, p["mixer"], h, cache,
+                                              token_slot, token_active)
+    else:
+        raise ValueError(spec.mixer)
+    x = x + y
+    x, _aux = _ffn_apply(cfg, spec, p, x)
+    return x, new_cache
+
+
 def block_init_cache(cfg: ModelConfig, spec: LayerSpec, tp: int, batch: int,
                      max_len: int) -> dict:
     if spec.mixer == ATTN:

@@ -346,6 +346,58 @@ def forward_chunk(cfg: ModelConfig, params: dict, tokens: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# forward: token-packed dense-batch step (decode + all prefill chunks fused)
+# ---------------------------------------------------------------------------
+def forward_packed(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                   cache: list, token_slot: jax.Array, token_pos: jax.Array,
+                   token_wpos: jax.Array, token_active: jax.Array):
+    """One iteration's *entire* model work as a single program (DESIGN.md
+    §8): the decode tokens (one per decoding slot) and every scheduled
+    prefill chunk are packed into one ``(1, T)`` token stream with per-token
+    metadata, generalizing ``forward_chunk`` from one contiguous segment to
+    many.
+
+    tokens: (1, T[, K]) packed stream; token_slot: (T,) slot id per token;
+    token_pos: (T,) absolute position of the token within its request;
+    token_wpos: (T,) cache write position — ``token_pos`` for real tokens,
+    ``max_len`` (out of bounds → scatter-dropped) for padding; token_active:
+    (T,) False for padding tokens, which then neither write K/V nor commit
+    recurrent state.
+
+    Attention writes each token's K/V (MLA latents) at ``(slot, pos)`` and
+    applies a segment-aware mask — a token attends rows ``[0, pos]`` of its
+    own slot only, so segments never attend across each other; recurrent
+    mixers advance per-slot state through a token scan with active-masking.
+    ``T`` is the only shape parameter, so the engine's jit compile cache is
+    bounded by the scheduler's discrete dense sizes.
+
+    Returns (logits (1, T, vocab[, K]), new_cache).
+    """
+    x = _embed(cfg, params, tokens)
+    positions = token_pos[None]
+    new_cache: list = []
+    for gi, (pattern, reps) in enumerate(cfg.layer_groups()):
+        stacked_p = params[f"group{gi}"]
+        stacked_c = cache[gi]
+
+        def body(x, pc, _pattern=pattern):
+            layer_p, layer_c = pc
+            new_c = {}
+            for i, spec in enumerate(_pattern):
+                x, c = blocks.block_packed(cfg, spec, layer_p[f"sub{i}"], x,
+                                           positions, layer_c[f"sub{i}"],
+                                           token_slot, token_wpos,
+                                           token_active)
+                new_c[f"sub{i}"] = c
+            return x, new_c
+
+        x, nc = jax.lax.scan(body, x, (stacked_p, stacked_c))
+        new_cache.append(nc)
+    logits = _head(cfg, params, x)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
 # prefill -> cache handoff (dry-run prefill step & engine prefill)
 # ---------------------------------------------------------------------------
 def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array, *,

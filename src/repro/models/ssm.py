@@ -108,6 +108,50 @@ def mamba_decode(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict):
     return shard(out, "batch", "act_seq", "embed"), {"conv": conv_state, "ssm": h}
 
 
+def mamba_packed(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
+                 token_slot: jax.Array, token_active: jax.Array):
+    """Token-packed dense-batch step (DESIGN.md §8).  x: (1, T, D) mixed
+    decode + prefill-chunk tokens; cache: {conv (N, K-1, d_in),
+    ssm (N, d_in, S)} — the whole slot-state array.
+
+    The input/gate projections run dense over the packed stream (MXU-shaped,
+    one GEMM for the whole iteration); the inherently sequential part — conv
+    history shift + selective scan — runs as one ``lax.scan`` over the T
+    tokens that gathers each token's *slot* state, advances it one step, and
+    scatters it back.  Tokens of the same segment therefore chain through
+    their slot's state exactly as the chunked path does, while tokens of
+    different slots merely pass each other's state through untouched.
+    Inactive (padding) tokens are masked out of the state commit."""
+    xs, z = _pre(cfg, p, x)                              # (1, T, d_in)
+
+    def step(carry, inp):
+        conv_c, ssm_c = carry
+        xs_t, s_i, act = inp                             # (d_in,), i32, bool
+        hist = jax.lax.dynamic_index_in_dim(conv_c, s_i, 0)     # (1,K-1,d_in)
+        h0 = jax.lax.dynamic_index_in_dim(ssm_c, s_i, 0)        # (1,d_in,N)
+        xc_t, new_hist = causal_conv1d_step(xs_t[None], hist, p["conv_w"],
+                                            p["conv_b"])
+        xc_t = silu(xc_t)                                # (1, d_in)
+        dt, a, b, c = _ssm_params(cfg, p, xc_t[:, None, :])
+        y_t, h1 = ssm_step_ref(xc_t, dt[:, 0], a, b[:, 0], c[:, 0],
+                               p["d_skip"], h0)
+        conv_c = jax.lax.dynamic_update_index_in_dim(
+            conv_c, jnp.where(act, new_hist, hist).astype(conv_c.dtype),
+            s_i, 0)
+        ssm_c = jax.lax.dynamic_update_index_in_dim(
+            ssm_c, jnp.where(act, h1, h0), s_i, 0)
+        return (conv_c, ssm_c), y_t[0]
+
+    (conv_f, ssm_f), ys = jax.lax.scan(
+        step, (cache["conv"], cache["ssm"]),
+        (xs[0], token_slot, token_active))
+    y = ys[None] * silu(z)
+    y = shard(y, "batch", "act_seq", "act_inner")
+    out = jnp.einsum("bsk,kd->bsd", y, p["w_out"])
+    out = shard(out, "batch", "act_seq", "embed")
+    return out, {"conv": conv_f, "ssm": ssm_f}
+
+
 def mamba_init_cache(cfg: ModelConfig, tp: int, batch: int) -> dict:
     mc = cfg.mamba or MambaConfig()
     d_in, _, n = _dims(cfg)

@@ -228,6 +228,60 @@ def mlstm_decode(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict):
     return out, {"conv": conv_state, "c": c, "n": n, "m": m}
 
 
+def mlstm_packed(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
+                 token_slot: jax.Array, token_active: jax.Array):
+    """Token-packed dense-batch step (DESIGN.md §8): the up-projection runs
+    dense over the (1, T) packed stream; the recurrent part is one
+    ``lax.scan`` over tokens that gathers the token's slot state
+    (conv tail + matrix memory (C, n, m)), advances it one step, and
+    scatters it back — active-masked so padding never commits state."""
+    d_in, h, dh = _mlstm_dims(cfg)
+    xz = jnp.einsum("bsd,dk->bsk", x, p["w_up"])         # (1, T, 2*d_in)
+    xs, z = jnp.split(xz, 2, axis=-1)
+
+    def step(carry, inp):
+        conv_c, c_c, n_c, m_c = carry
+        xs_t, s_i, act = inp
+        hist = jax.lax.dynamic_index_in_dim(conv_c, s_i, 0)
+        c0 = jax.lax.dynamic_index_in_dim(c_c, s_i, 0)
+        n0 = jax.lax.dynamic_index_in_dim(n_c, s_i, 0)
+        m0 = jax.lax.dynamic_index_in_dim(m_c, s_i, 0)
+        xc_t, new_hist = causal_conv1d_step(xs_t[None], hist, p["conv_w"],
+                                            p["conv_b"])
+        xc_t = silu(xc_t)                                # (1, d_in)
+        xch = xc_t.reshape(1, h, dh)
+        xsh = xs_t[None].reshape(1, h, dh)
+        q = jnp.einsum("bhk,hkj->bhj", xch, p["w_q"])
+        k = jnp.einsum("bhk,hkj->bhj", xch, p["w_k"])
+        v = jnp.einsum("bhk,hkj->bhj", xsh, p["w_v"])
+        ig = jnp.einsum("bk,kh->bh", xc_t.astype(jnp.float32), p["w_i"]) \
+            + p["b_i"]
+        fg = jax.nn.log_sigmoid(
+            jnp.einsum("bk,kh->bh", xc_t.astype(jnp.float32), p["w_f"])
+            + p["b_f"])
+        y_t, (c1, n1, m1) = mlstm_step_ref(q, k, v, ig, fg, (c0, n0, m0))
+        conv_c = jax.lax.dynamic_update_index_in_dim(
+            conv_c, jnp.where(act, new_hist, hist).astype(conv_c.dtype),
+            s_i, 0)
+        c_c = jax.lax.dynamic_update_index_in_dim(
+            c_c, jnp.where(act, c1, c0), s_i, 0)
+        n_c = jax.lax.dynamic_update_index_in_dim(
+            n_c, jnp.where(act, n1, n0), s_i, 0)
+        m_c = jax.lax.dynamic_update_index_in_dim(
+            m_c, jnp.where(act, m1, m0), s_i, 0)
+        return (conv_c, c_c, n_c, m_c), y_t.reshape(d_in)
+
+    (conv_f, c_f, n_f, m_f), ys = jax.lax.scan(
+        step, (cache["conv"], cache["c"], cache["n"], cache["m"]),
+        (xs[0], token_slot, token_active))
+    y = rmsnorm(ys[None].astype(x.dtype), p["out_norm"], cfg.norm_eps) \
+        * silu(z)
+    y = shard(y, "batch", "act_seq", "act_inner")
+    out = jnp.einsum("bsk,kd->bsd", y, p["w_down"])
+    out = shard(out, "batch", "act_seq", "embed")
+    return out, {"conv": conv_f, "c": c_f, "n": n_f, "m": m_f}
+
+
 def mlstm_init_cache(cfg: ModelConfig, tp: int, batch: int) -> dict:
     xc = _xc(cfg)
     d_in, h, dh = _mlstm_dims(cfg)
@@ -351,6 +405,54 @@ def _slstm_step_impl(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict):
     out = jnp.einsum("bf,fd->bd", u * silu(g), p["w_ffn_down"])[:, None, :]
     return shard(out, "batch", "act_seq", "embed"), {
         "conv": conv_state, "c": c, "n": n, "h": hs, "m": m}
+
+
+def slstm_packed(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
+                 token_slot: jax.Array, token_active: jax.Array):
+    """Token-packed dense-batch step (DESIGN.md §8): per-token slot-state
+    scan for the sequential sLSTM recurrence (gather state, one step,
+    active-masked scatter back); the post-recurrence norm + GLU FFN run
+    dense over the packed stream."""
+    d = cfg.d_model
+
+    def step(carry, inp):
+        conv_c, c_c, n_c, h_c, m_c = carry
+        x_t, s_i, act = inp                              # (D,), i32, bool
+        hist = jax.lax.dynamic_index_in_dim(conv_c, s_i, 0)
+        c0 = jax.lax.dynamic_index_in_dim(c_c, s_i, 0)
+        n0 = jax.lax.dynamic_index_in_dim(n_c, s_i, 0)
+        h0 = jax.lax.dynamic_index_in_dim(h_c, s_i, 0)
+        m0 = jax.lax.dynamic_index_in_dim(m_c, s_i, 0)
+        xc_t, new_hist = causal_conv1d_step(x_t[None], hist, p["conv_w"],
+                                            p["conv_b"])
+        xc_t = silu(xc_t)
+        gi = jnp.einsum("bd,dk->bk", xc_t, p["w_gates"][:, : 2 * d])
+        gz = jnp.einsum("bd,dk->bk", x_t[None], p["w_gates"][:, 2 * d:])
+        xg = jnp.concatenate([gi, gz], axis=-1)[:, None, :]
+        ys, (c1, n1, h1, m1) = _slstm_scan(cfg, p, xg, (c0, n0, h0, m0))
+        conv_c = jax.lax.dynamic_update_index_in_dim(
+            conv_c, jnp.where(act, new_hist, hist).astype(conv_c.dtype),
+            s_i, 0)
+        c_c = jax.lax.dynamic_update_index_in_dim(
+            c_c, jnp.where(act, c1, c0), s_i, 0)
+        n_c = jax.lax.dynamic_update_index_in_dim(
+            n_c, jnp.where(act, n1, n0), s_i, 0)
+        h_c = jax.lax.dynamic_update_index_in_dim(
+            h_c, jnp.where(act, h1, h0), s_i, 0)
+        m_c = jax.lax.dynamic_update_index_in_dim(
+            m_c, jnp.where(act, m1, m0), s_i, 0)
+        return (conv_c, c_c, n_c, h_c, m_c), ys[0, 0]
+
+    carry0 = (cache["conv"], cache["c"], cache["n"], cache["h"], cache["m"])
+    (conv_f, c_f, n_f, h_f, m_f), ys = jax.lax.scan(
+        step, carry0, (x[0], token_slot, token_active))
+    y = rmsnorm(ys[None], p["out_norm"], cfg.norm_eps)   # (1, T, D)
+    up = jnp.einsum("bsd,df->bsf", y, p["w_ffn_up"])
+    u, g = jnp.split(up, 2, axis=-1)
+    yf = shard(u * silu(g), "batch", "act_seq", "act_ff")
+    out = jnp.einsum("bsf,fd->bsd", yf, p["w_ffn_down"])
+    out = shard(out, "batch", "act_seq", "embed")
+    return out, {"conv": conv_f, "c": c_f, "n": n_f, "h": h_f, "m": m_f}
 
 
 def slstm_init_cache(cfg: ModelConfig, tp: int, batch: int) -> dict:

@@ -1,28 +1,33 @@
 """End-to-end serving engine: scheduler + paged KV + model execution.
 
-Slot-based execution: the decode path runs over a fixed-capacity slot array
-(static shapes — one compiled program; the paper's discrete-batching insight
-applied to the XLA compilation cache).  Prefill runs in chunks (chunked
-prefill, §4.2) whose KV states are written into the request's slot.
+Slot-based execution: model state lives in fixed-capacity slot caches
+(static shapes — bounded compiled programs; the paper's discrete-batching
+insight applied to the XLA compilation cache).  Prefill runs in chunks
+(chunked prefill, §4.2) whose KV states are written into the request's slot.
 
-Chunked prefill is *incremental* (DESIGN.md §7): each chunk runs
-``model.forward_chunk`` against the slot's carried cache — attention K/V
-(latents) are written at the prefix offset, recurrent mixers resume from
-their cached state — so every prompt token passes through the model exactly
-once (O(p) FLOPs for a p-token prompt).  The chunk step is jitted with
-*bucketed* chunk lengths: the scheduler quantizes chunk lengths to its
-discrete sizes, so the XLA compile cache is bounded by
-``len(discrete_sizes) + chunk_min - 1`` programs.  The pre-refactor
-recompute path (re-run ``forward_full`` over ``[0, upto)`` per chunk,
-O(p²/chunk) FLOPs) is kept as ``prefill_mode="recompute"`` for A/B
-benchmarking.
+**Packed step (default, DESIGN.md §8).**  One iteration = one jitted
+program: the decode tokens (one per decoding slot) and *all* scheduled
+prefill chunks are packed into a single ``(1, T)`` token stream with
+per-token ``(slot, position)`` metadata and run through
+``model.forward_packed`` — K/V (MLA latents) scattered at each segment's
+offset, a segment-aware mask so segments never attend across each other,
+recurrent state advanced per-slot with active-masking, greedy sampling
+on-device.  Exactly one model dispatch and one device→host transfer per
+iteration (``EngineStats.model_dispatches`` / ``host_syncs``), vs the
+legacy path's ``1 + K`` dispatches with a blocking sync per chunk.  ``T``
+is bucketed to the scheduler's discrete dense sizes, so
+``BatchPlan.dense_batch`` is the *actual launched shape* and the compile
+cache is bounded by ``len(discrete_sizes) + 1`` (the ``max_active`` floor
+bucket for decode-only iterations, DESIGN.md §8).  Segment order inside
+the stream follows the nano-batch interleave
+(``core/nanobatch.packed_segment_order``), so the interleave governs the
+real token layout of the launched program, not just the cost model.
 
-Iteration order: decode first, then prefill.  The decode step executes over
-*all* slots (static shape); mid-prefill slots are masked out of the cache
-update (``active``), so their carried prefill state is never perturbed —
-this mirrors NanoFlow's asynchronous top-level scheduling where batch
-formation for iteration i+1 happens before iteration i's results are
-inspected (§5.3).
+**Legacy step (``step_mode="legacy"``, kept for A/B).**  Decode first over
+all slots, then one ``model.forward_chunk`` dispatch per prefill chunk,
+each gathering/scattering the chunk's slot sub-cache (DESIGN.md §7).  The
+pre-§7 recompute path (O(p²/chunk) FLOPs) remains as
+``prefill_mode="recompute"`` (implies the legacy step).
 
 On TPU the per-iteration program is the NanoFlow pipeline (nano-batched,
 overlapped ops); on this CPU container the same engine logic drives the ref
@@ -58,7 +63,10 @@ class EngineStats:
     decode_tokens: int = 0
     wall_time: float = 0.0
     prefill_time: float = 0.0
-    dense_batch_hist: dict = dataclasses.field(default_factory=dict)
+    model_dispatches: int = 0        # hot-path model program launches
+    host_syncs: int = 0              # blocking device→host result transfers
+    packed_pad_tokens: int = 0       # bucketing padding launched (packed step)
+    dense_batch_hist: dict[int, int] = dataclasses.field(default_factory=dict)
 
     @property
     def total_tokens(self) -> int:
@@ -74,6 +82,14 @@ class EngineStats:
         return (self.prefill_model_tokens / self.prefill_tokens
                 if self.prefill_tokens else 0.0)
 
+    @property
+    def dispatches_per_iter(self) -> float:
+        return self.model_dispatches / self.iterations if self.iterations else 0.0
+
+    @property
+    def syncs_per_iter(self) -> float:
+        return self.host_syncs / self.iterations if self.iterations else 0.0
+
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 8,
@@ -82,13 +98,24 @@ class ServeEngine:
                  avg_decode_len: float = 64.0,
                  discrete_sizes: tuple[int, ...] = (256, 128, 64, 32, 16, 8),
                  prefill_mode: str = "incremental",
+                 step_mode: Optional[str] = None,
+                 nano: int = 2,
                  seed: int = 0):
         assert prefill_mode in ("incremental", "recompute"), prefill_mode
+        if step_mode is None:
+            # the recompute prefill path has no packed equivalent — A/B runs
+            # that ask for it get the legacy per-chunk step automatically
+            step_mode = "packed" if prefill_mode == "incremental" else "legacy"
+        assert step_mode in ("packed", "legacy"), step_mode
+        assert not (step_mode == "packed" and prefill_mode == "recompute"), \
+            "packed step runs incremental prefill only"
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
         self.max_len = max_len
         self.prefill_mode = prefill_mode
+        self.step_mode = step_mode
+        self.nano = nano
         self.key = jax.random.PRNGKey(seed)
 
         hd = cfg.resolved_head_dim
@@ -106,11 +133,17 @@ class ServeEngine:
         self.cache_len = jnp.zeros((max_slots,), jnp.int32)
         self.slot_free = list(range(max_slots))
         self.stats = EngineStats()
+        # host mirror of each slot's context length (packed step builds its
+        # per-token positions from this without any device read)
+        self._pos = np.zeros((max_slots,), np.int64)
 
         # fresh one-slot cache, scattered into a slot on (re)assignment so a
         # reused slot never leaks the previous request's recurrent state
         self._slot_init = model_lib.init_cache(cfg, 1, 1, max_len)
 
+        # one compiled program per bucketed launch length T — the compile
+        # cache is bounded by the scheduler's discrete dense sizes
+        self._packed_step = jax.jit(self._packed_impl, donate_argnums=(1,))
         self._decode_step = jax.jit(self._decode_impl, donate_argnums=(1,))
         # one compiled program per bucketed chunk length (scheduler-quantized)
         self._prefill_step = jax.jit(self._prefill_impl, donate_argnums=(1,))
@@ -159,6 +192,45 @@ class ServeEngine:
             cache, new_sub)
         return sampling.greedy(logits[:, -1]), new_cache
 
+    # ---- jitted token-packed step (one dispatch per iteration) --------------
+    def _packed_impl(self, params, cache, tokens, token_slot, token_pos,
+                     token_wpos, token_active, cache_len, reset):
+        """The whole iteration as one program (DESIGN.md §8): reset reused
+        slots' recurrent state, run the packed multi-segment forward, sample
+        greedily on-device, and advance ``cache_len`` from the per-token
+        metadata — so the only device→host transfer is the sampled tokens."""
+        cache = self._reset_recurrent(cache, reset)
+        logits, new_cache = model_lib.forward_packed(
+            self.cfg, params, tokens, cache, token_slot, token_pos,
+            token_wpos, token_active)
+        next_tok = sampling.greedy(logits[0])
+        new_len = jnp.where(reset, 0, cache_len)
+        new_len = new_len.at[token_slot].max(
+            jnp.where(token_active, token_pos + 1, 0))
+        return next_tok, new_cache, new_len
+
+    def _reset_recurrent(self, cache, reset):
+        """Select fresh recurrent state for slots in ``reset`` (reused slots
+        must not leak the previous request's SSM/LSTM state).  Attention
+        leaves need no reset — rows at or beyond the new request's written
+        extent are never attended — and skipping them keeps the masked
+        select off the big (slots, max_len, ...) tensors."""
+        out = []
+        for gi, (pattern, reps) in enumerate(self.cfg.layer_groups()):
+            g = {}
+            for i, spec in enumerate(pattern):
+                sub = cache[gi][f"sub{i}"]
+                if spec.mixer == ATTN:
+                    g[f"sub{i}"] = sub
+                else:
+                    g[f"sub{i}"] = jax.tree.map(
+                        lambda c, z: jnp.where(
+                            reset.reshape((1, -1) + (1,) * (c.ndim - 2)),
+                            z.astype(c.dtype), c),
+                        sub, self._slot_init[gi][f"sub{i}"])
+            out.append(g)
+        return out
+
     # ---- public API ----------------------------------------------------------
     def submit(self, req: Request) -> None:
         self.scheduler.submit(req)
@@ -179,6 +251,87 @@ class ServeEngine:
         self.stats.iterations += 1
         self.stats.dense_batch_hist[plan.dense_batch] = \
             self.stats.dense_batch_hist.get(plan.dense_batch, 0) + 1
+        if self.step_mode == "packed":
+            sampled = self._step_packed(plan)
+        else:
+            sampled = self._step_legacy(plan)
+        finished = self.scheduler.commit(plan, sampled, now)
+        for r in finished:
+            self._finalize(r)
+        return finished
+
+    # ---- packed iteration: one dispatch, one host sync ----------------------
+    def _step_packed(self, plan: BatchPlan) -> dict[int, int]:
+        packed = self.scheduler.pack(plan, nano=self.nano)
+        reset = np.zeros((self.max_slots,), bool)
+        for seg in packed.segments:
+            r = seg.req
+            if r.slot < 0:
+                assert self.slot_free, "scheduler admitted beyond slot capacity"
+                r.slot = self.slot_free.pop()
+                reset[r.slot] = True
+                self._pos[r.slot] = 0
+
+        t_total = packed.launch_tokens
+        tokens = np.zeros((t_total,), np.int32)
+        slot = np.zeros((t_total,), np.int32)
+        pos = np.zeros((t_total,), np.int32)
+        active = np.zeros((t_total,), bool)
+        sample_at: list[tuple[int, int]] = []      # (rid, stream index)
+        t = 0
+        for seg in packed.segments:
+            r = seg.req
+            if seg.is_decode:
+                tokens[t] = r.output[-1] if r.output else r.prompt[-1]
+                slot[t] = r.slot
+                pos[t] = self._pos[r.slot]
+                active[t] = True
+                sample_at.append((r.rid, t))
+                t += 1
+            else:
+                ln = seg.length
+                tokens[t:t + ln] = r.prompt[seg.offset:seg.offset + ln]
+                slot[t:t + ln] = r.slot
+                pos[t:t + ln] = np.arange(seg.offset, seg.offset + ln)
+                active[t:t + ln] = True
+                if seg.offset + ln == r.prompt_len:
+                    sample_at.append((r.rid, t + ln - 1))
+                t += ln
+        assert t == packed.tokens, (t, packed.tokens)
+        # padding tokens write out of bounds -> the scatter drops them
+        wpos = np.where(active, pos, self.max_len).astype(np.int32)
+
+        tok_in = jnp.asarray(tokens[None])
+        if self.cfg.frontend == "audio":
+            tok_in = jnp.repeat(tok_in[..., None], self.cfg.num_codebooks,
+                                axis=-1)
+        next_tok, self.cache, self.cache_len = self._packed_step(
+            self.params, self.cache, tok_in, jnp.asarray(slot),
+            jnp.asarray(pos), jnp.asarray(wpos), jnp.asarray(active),
+            self.cache_len, jnp.asarray(reset))
+        self.stats.model_dispatches += 1
+        nt = np.asarray(next_tok)          # the iteration's one D2H transfer
+        self.stats.host_syncs += 1
+
+        sampled: dict[int, int] = {}
+        for rid, idx in sample_at:
+            v = nt[idx]
+            sampled[rid] = int(v) if np.ndim(v) == 0 else int(v.flat[0])
+        n_decode = 0
+        for seg in packed.segments:
+            if seg.is_decode:
+                self._pos[seg.req.slot] += 1
+                n_decode += 1
+            else:
+                self._pos[seg.req.slot] = seg.offset + seg.length
+        self.stats.decode_tokens += n_decode
+        self.stats.prefill_tokens += packed.tokens - n_decode
+        self.stats.prefill_model_tokens += packed.tokens - n_decode
+        self.stats.packed_pad_tokens += packed.padding
+        return sampled
+
+    # ---- legacy iteration: decode dispatch + one dispatch per chunk ---------
+    def _step_legacy(self, plan: BatchPlan) -> dict[int, int]:
         sampled: dict[int, int] = {}
 
         # ---- batched decode over all slots (static shape) --------------------
@@ -196,11 +349,14 @@ class ServeEngine:
             next_tok, self.cache = self._decode_step(
                 self.params, self.cache, tok_in, self.cache_len,
                 jnp.asarray(active))
+            self.stats.model_dispatches += 1
             self.cache_len = self.cache_len + jnp.asarray(active, jnp.int32)
             nt = np.asarray(next_tok)
+            self.stats.host_syncs += 1
             for r in decode_reqs:
                 t = nt[r.slot]
                 sampled[r.rid] = int(t) if np.ndim(t) == 0 else int(t.flat[0])
+                self._pos[r.slot] += 1
             self.stats.decode_tokens += len(decode_reqs)
 
         # ---- chunked prefill -------------------------------------------------
@@ -210,9 +366,11 @@ class ServeEngine:
             if r.slot < 0:
                 assert self.slot_free, "scheduler admitted beyond slot capacity"
                 r.slot = self.slot_free.pop()
+                self._pos[r.slot] = 0
                 if self.prefill_mode == "incremental":
                     self.cache = self._reset_step(
                         self.cache, self._slot_init, jnp.int32(r.slot))
+                    self.stats.model_dispatches += 1
             if self.prefill_mode == "incremental":
                 last_tok = self._prefill_chunk(r, chunk.offset, chunk.length)
                 self.stats.prefill_model_tokens += chunk.length
@@ -220,14 +378,11 @@ class ServeEngine:
                 last_tok = self._prefill_to(r, chunk.offset + chunk.length)
                 self.stats.prefill_model_tokens += chunk.offset + chunk.length
             self.stats.prefill_tokens += chunk.length
+            self._pos[r.slot] = chunk.offset + chunk.length
             if chunk.offset + chunk.length == r.prompt_len:
                 sampled[r.rid] = last_tok
         self.stats.prefill_time += time.perf_counter() - t_prefill
-
-        finished = self.scheduler.commit(plan, sampled, now)
-        for r in finished:
-            self._finalize(r)
-        return finished
+        return sampled
 
     # ---- internals -----------------------------------------------------------
     def _prefill_chunk(self, r: Request, offset: int, length: int) -> int:
@@ -241,8 +396,10 @@ class ServeEngine:
         next_tok, self.cache = self._prefill_step(
             self.params, self.cache, tok_in, jnp.int32(r.slot),
             jnp.int32(offset))
+        self.stats.model_dispatches += 1
         self.cache_len = self.cache_len.at[r.slot].set(offset + length)
         t = np.asarray(next_tok)
+        self.stats.host_syncs += 1
         return int(t) if t.ndim == 0 else int(t.flat[0])
 
     def _prefill_to(self, r: Request, upto: int) -> int:
@@ -258,9 +415,11 @@ class ServeEngine:
             tok_in = jnp.repeat(tok_in[..., None], cfg.num_codebooks, axis=-1)
         logits, _aux, states = model_lib.forward_full(
             cfg, self.params, tok_in, return_states=True)
+        self.stats.model_dispatches += 1
         self._scatter_states(r.slot, states)
         self.cache_len = self.cache_len.at[r.slot].set(upto)
         last = np.asarray(logits[0, -1])
+        self.stats.host_syncs += 1
         return int(last.argmax(-1)) if last.ndim == 1 else int(last.argmax(-1).flat[0])
 
     def _scatter_states(self, slot: int, states) -> None:
@@ -290,6 +449,7 @@ class ServeEngine:
         if r.slot >= 0:
             self.slot_free.append(r.slot)
             self.cache_len = self.cache_len.at[r.slot].set(0)
+            self._pos[r.slot] = 0
             r.slot = -1
         # strip the one post-EOS token (async EOS, §5.3)
         if r.pending_eos and r.eos_id is not None and r.eos_id in r.output:

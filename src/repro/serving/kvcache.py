@@ -84,7 +84,6 @@ class PagedKVManager:
         order = sorted(range(len(reqs)), key=lambda i: remaining[i])
         peak = 0
         alive = set(range(len(reqs)))
-        t_prev = 0
         for i in order:
             t = remaining[i]
             # just before request i finishes, everyone alive grew by t tokens
@@ -92,7 +91,6 @@ class PagedKVManager:
                          for j in alive)
             peak = max(peak, demand)
             alive.discard(i)
-            t_prev = t
         return peak
 
     def can_admit(self, req: Request, active: list[Request]) -> bool:
@@ -145,17 +143,26 @@ class PagedKVManager:
         while self.stats.host_bytes > self.host_capacity and self.host_pool:
             _, (_, evicted) = self.host_pool.popitem(last=False)   # LRU
             self.stats.host_bytes -= len(evicted)
+            # the evicted request's KV is gone for good — a future upload()
+            # will miss and the conversation re-prefills from scratch
+            self.stats.discarded_requests += 1
         self.free(rid)
 
     def upload(self, rid: int, dtype, shape) -> Optional[np.ndarray]:
         """Multi-round re-activation: restore KV from host, re-allocating
-        device pages (page distribution kernel)."""
-        entry = self.host_pool.pop(rid, None)
+        device pages (page distribution kernel).
+
+        Device re-allocation can fail under pressure; the blob must then
+        *stay* in the host pool so the caller can retry later (it used to be
+        popped first and silently lost — the request's KV discarded without
+        even counting it)."""
+        entry = self.host_pool.get(rid)
         if entry is None:
             return None
         tokens, blob = entry
+        if not self.allocate(rid, tokens):
+            return None                     # kept on host; retryable
+        self.host_pool.pop(rid)
         self.stats.host_bytes -= len(blob)
         self.stats.upload_bytes += len(blob)
-        if not self.allocate(rid, tokens):
-            return None
         return np.frombuffer(blob, dtype=dtype).reshape(shape).copy()

@@ -14,6 +14,8 @@ import dataclasses
 from collections import deque
 from typing import Optional
 
+from repro.core.nanobatch import (NanoBatchPlan, nano_batch_sizes_for,
+                                  packed_segment_order)
 from repro.serving.kvcache import PagedKVManager
 from repro.serving.request import Request, State
 
@@ -36,6 +38,34 @@ class BatchPlan:
         return len(self.decode) + sum(c.length for c in self.prefill)
 
 
+@dataclasses.dataclass
+class PackedSegment:
+    """One contiguous token run of the packed stream (DESIGN.md §8):
+    a single decode token, or one prefill chunk."""
+    req: Request
+    offset: int          # position of the segment's first token (prefill);
+    #                      decode positions come from the engine's slot state
+    length: int
+    is_decode: bool
+
+
+@dataclasses.dataclass
+class PackedPlan:
+    """Token-packed launch layout for one iteration: segments in nano-batch
+    interleave order, plus the bucketed launch length (the *actual* compiled
+    shape — the paper's discrete-batching insight applied end-to-end)."""
+    segments: list[PackedSegment]
+    tokens: int                     # real tokens (== BatchPlan.dense_tokens)
+    launch_tokens: int              # bucketed T the program is compiled for
+    dense_batch: int                # the discrete size the plan targeted
+    nano: NanoBatchPlan             # nano-batch split of the launched stream
+    segment_nano: tuple[int, ...]   # nano-batch id per segment
+
+    @property
+    def padding(self) -> int:
+        return self.launch_tokens - self.tokens
+
+
 class GlobalBatchScheduler:
     def __init__(self, kv: PagedKVManager, *,
                  discrete_sizes: tuple[int, ...] = (2048, 1024, 512, 256, 128,
@@ -52,6 +82,9 @@ class GlobalBatchScheduler:
         self.chunk_min = max(prefill_chunk_min, self.sizes[-1])
         self.waiting: deque[Request] = deque()
         self.active: list[Request] = []
+        # padding accounting for the packed step (tokens launched but unused)
+        self.padding_tokens = 0
+        self.launched_tokens = 0
 
     # ---- admission ---------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -111,6 +144,48 @@ class GlobalBatchScheduler:
             chunks.append(PrefillChunk(req=r, offset=r.prefill_done, length=take))
             budget -= take
         return BatchPlan(decode=decode, prefill=chunks, dense_batch=dense)
+
+    # ---- packed launch layout (single-dispatch step, DESIGN.md §8) ----------
+    def bucket_tokens(self, tokens: int) -> int:
+        """Launch length for ``tokens`` packed tokens: the smallest discrete
+        dense size that fits (compile-cache bounded by ``len(sizes)``), or —
+        defensively, if an iteration ever exceeds the largest size — the
+        next multiple of it.  When ``max_active`` sits below the smallest
+        discrete size, it joins the grid as a floor bucket: a decode-only
+        iteration can never exceed ``max_active`` tokens, and padding it up
+        to a size no real batch reaches would be pure waste (one extra
+        compiled program, used by every decode-only iteration)."""
+        grid = tuple(reversed(self.sizes))   # ascending
+        if self.max_active < grid[0]:
+            grid = (self.max_active,) + grid
+        for s in grid:
+            if tokens <= s:
+                return s
+        return -(-tokens // self.sizes[0]) * self.sizes[0]
+
+    def pack(self, plan: BatchPlan, *, nano: int = 2) -> PackedPlan:
+        """Lay one iteration's decode tokens + prefill chunks out as a
+        token-packed stream: segments ordered by the nano-batch interleave
+        (core/nanobatch.packed_segment_order — memory-bound decode first,
+        compute-bound chunks in descending length), launch length bucketed
+        to the discrete dense sizes, padding accounted."""
+        segs = [PackedSegment(req=r, offset=-1, length=1, is_decode=True)
+                for r in plan.decode]
+        segs += [PackedSegment(req=c.req, offset=c.offset, length=c.length,
+                               is_decode=False) for c in plan.prefill]
+        order = packed_segment_order(
+            ["decode" if s.is_decode else "prefill" for s in segs],
+            [s.length for s in segs])
+        segs = [segs[i] for i in order]
+        tokens = plan.dense_tokens
+        launch = self.bucket_tokens(tokens)
+        nano_plan = nano_batch_sizes_for(launch, nano)
+        self.padding_tokens += launch - tokens
+        self.launched_tokens += launch
+        return PackedPlan(segments=segs, tokens=tokens, launch_tokens=launch,
+                          dense_batch=plan.dense_batch, nano=nano_plan,
+                          segment_nano=nano_plan.assign_segments(
+                              [s.length for s in segs]))
 
     # ---- post-iteration bookkeeping -------------------------------------------
     def commit(self, plan: BatchPlan, sampled: dict[int, int],

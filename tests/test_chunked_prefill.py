@@ -228,7 +228,13 @@ def test_engine_incremental_matches_naive_greedy():
                                   "xlstm-1.3b"])
 def test_engine_modes_agree_with_slot_reuse(arch):
     """Incremental == recompute engine outputs on MLA/SSM/xLSTM archs, with
-    more requests than slots so slots get reused (state reset path)."""
+    more requests than slots so slots get reused (state reset path).
+
+    Both modes pin ``step_mode="legacy"`` so this stays the §7 prefill A/B
+    it always was (recompute implies the legacy step; running incremental
+    through the packed step would compare different bf16 accumulation
+    orders instead — packed-vs-legacy equivalence is covered in f32 by
+    tests/test_packed_step.py)."""
     cfg = _cfg(arch)
     params = model.init(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(1)
@@ -239,7 +245,7 @@ def test_engine_modes_agree_with_slot_reuse(arch):
     for mode in ("incremental", "recompute"):
         eng = ServeEngine(cfg, params, max_slots=2, max_len=48,
                           discrete_sizes=(16, 8), avg_decode_len=4,
-                          prefill_mode=mode)
+                          prefill_mode=mode, step_mode="legacy")
         for i, p in enumerate(prompts):
             eng.submit(Request(rid=i, prompt=list(p), max_new_tokens=3))
         done = eng.run()
