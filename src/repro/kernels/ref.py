@@ -81,9 +81,23 @@ def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     return out.reshape(b, h, dv).astype(q.dtype)
 
 
+def _kv_bucket_view(k_cache: jax.Array, v_cache: jax.Array,
+                    kv_bucket: Optional[int]):
+    """Static slice of the slot caches to the iteration's KV-length bucket
+    (DESIGN.md §9).  The caller guarantees ``max(lengths) <= kv_bucket``;
+    rows at or beyond the bucket are never attended, so slicing them off is
+    exact — and the einsums below then read/compute O(kv_bucket) per slot
+    instead of O(max_len)."""
+    if kv_bucket is not None and kv_bucket < k_cache.shape[1]:
+        k_cache = jax.lax.slice_in_dim(k_cache, 0, kv_bucket, axis=1)
+        v_cache = jax.lax.slice_in_dim(v_cache, 0, kv_bucket, axis=1)
+    return k_cache, v_cache
+
+
 def packed_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                          token_slot: jax.Array, lengths: jax.Array, *,
-                         logit_scale: Optional[float] = None) -> jax.Array:
+                         logit_scale: Optional[float] = None,
+                         kv_bucket: Optional[int] = None) -> jax.Array:
     """Segment-masked attention for the token-packed dense-batch step
     (DESIGN.md §8): every token of a packed ``(T,)`` stream attends its own
     slot's cache rows ``[0, lengths[t])`` and nothing else.
@@ -91,19 +105,23 @@ def packed_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     q: (T, H, D) packed queries; k_cache/v_cache: (N_slots, S, KV, D/Dv)
     slot caches (the packed step scatters each token's K/V at its
     ``(slot, position)`` before calling this); token_slot: (T,) int32 slot
-    per token; lengths: (T,) int32 = position + 1 per token.
+    per token; lengths: (T,) int32 = position + 1 per token; kv_bucket:
+    static bound on ``max(lengths)`` — only that many cache rows are read
+    (KV-length bucketing, DESIGN.md §9), ``None`` means the full cache.
 
     Segments never attend across each other: slot selection restricts each
     query to its own request's cache, and the length mask is exactly the
     causal mask because a segment's K/V occupies positions ``[0, pos]``.
 
     Shape strategy: scores/contexts are computed dense against *all* slots
-    and selected per token, rather than gathering each token's ``(S, ...)``
-    cache — the caches are then read once per einsum instead of once per
-    token (T-fold less traffic; N_slots is small, so the extra FLOPs are
-    noise next to the dense GEMMs).  A fused Pallas kernel would gather
-    block-wise instead; the call sites won't change.
+    (over the kv_bucket rows) and selected per token, rather than gathering
+    each token's ``(S, ...)`` cache — the caches are then read once per
+    einsum instead of once per token (T-fold less traffic; N_slots is
+    small, so the extra FLOPs are noise next to the dense GEMMs).  The
+    Pallas kernel (kernels/packed_attention.py) gathers block-wise instead,
+    through the same call sites.
     """
+    k_cache, v_cache = _kv_bucket_view(k_cache, v_cache, kv_bucket)
     t, h, d = q.shape
     n, s, kv, _ = k_cache.shape
     dv = v_cache.shape[-1]
@@ -126,9 +144,11 @@ def packed_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 
 def packed_attention_fast(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                           token_slot: jax.Array, lengths: jax.Array, *,
-                          logit_scale: Optional[float] = None) -> jax.Array:
+                          logit_scale: Optional[float] = None,
+                          kv_bucket: Optional[int] = None) -> jax.Array:
     """No-upcast variant of ``packed_attention_ref`` (§Perf HC3): same
     math, bf16 einsum operands with f32 in-register accumulation."""
+    k_cache, v_cache = _kv_bucket_view(k_cache, v_cache, kv_bucket)
     t, h, d = q.shape
     n, s, kv, _ = k_cache.shape
     dv = v_cache.shape[-1]

@@ -40,6 +40,17 @@ def main() -> None:
     ap.add_argument("--step-mode", default="packed",
                     choices=["packed", "legacy"],
                     help="packed = one fused dispatch/iteration (DESIGN.md §8)")
+    ap.add_argument("--no-kv-bucketing", action="store_true",
+                    help="sweep max_len every iteration instead of the "
+                         "KV-length bucket (DESIGN.md §9; A/B baseline)")
+    ap.add_argument("--attn-fast", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="no-upcast attention refs (§Perf HC3); default: "
+                         "REPRO_ATTN_FAST env")
+    ap.add_argument("--attn-stream", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="streamed long-seq flash ref; default: "
+                         "REPRO_ATTN_STREAM env")
     ap.add_argument("--online", action="store_true")
     ap.add_argument("--rate", type=float, default=4.0, help="req/s (poisson)")
     ap.add_argument("--duration", type=float, default=10.0)
@@ -51,7 +62,9 @@ def main() -> None:
         cfg = scale_down(cfg)
     params = model_lib.init(cfg, jax.random.PRNGKey(args.seed))
     eng = ServeEngine(cfg, params, max_slots=args.slots, max_len=args.max_len,
-                      step_mode=args.step_mode)
+                      step_mode=args.step_mode,
+                      kv_bucketing=not args.no_kv_bucketing,
+                      attn_fast=args.attn_fast, attn_stream=args.attn_stream)
     reqs = make_requests(args.requests, cfg.vocab_size, args.seed)
 
     if not args.online:
@@ -85,6 +98,11 @@ def main() -> None:
           f"{st.syncs_per_iter:.2f} host syncs/iter, "
           f"{st.packed_pad_tokens} pad tokens")
     print(f"dense batch histogram: {dict(sorted(st.dense_batch_hist.items()))}")
+    if st.kv_bucket_hist:
+        swept = sum(b * n for b, n in st.kv_bucket_hist.items())
+        dense = args.max_len * sum(st.kv_bucket_hist.values())
+        print(f"kv bucket histogram: {dict(sorted(st.kv_bucket_hist.items()))}"
+              f" (attention sweep {swept / max(dense, 1):.2f}x of max_len)")
     print(f"kv offload: {eng.kv.stats.offload_bytes/1e6:.2f} MB aggregated in "
           f"{eng.kv.stats.aggregated_copies} copies")
     lat = [(r.finished_at or 0) - r.arrival for r in done if r.finished_at]

@@ -172,7 +172,8 @@ def gqa_prefill_chunk(cfg: ModelConfig, p: dict, x: jax.Array,
 
 
 def gqa_packed(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
-               cache: dict, token_slot: jax.Array, token_wpos: jax.Array):
+               cache: dict, token_slot: jax.Array, token_wpos: jax.Array,
+               kv_bucket: Optional[int] = None):
     """Token-packed dense-batch step (DESIGN.md §8).  x: (1, T, D) — the
     iteration's decode tokens and *all* prefill-chunk tokens packed into one
     stream; positions: (1, T) absolute position of each token in its own
@@ -181,7 +182,12 @@ def gqa_packed(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
     (``wpos == S`` for padding tokens → dropped), then runs segment-masked
     attention: token t attends rows [0, positions[t]] of its own slot only,
     which covers the carried prefix *and* same-segment tokens written by
-    this very dispatch."""
+    this very dispatch.
+
+    ``kv_bucket`` (static, DESIGN.md §9): the engine's bound on this
+    iteration's ``max(positions) + 1`` — attention reads only that many
+    cache rows per slot, so its FLOPs/bytes scale with actual context, not
+    ``max_len``.  The scatter still targets the full cache."""
     q, k_new, v_new = _qkv(cfg, p, x, positions)
     k_cache = cache["k"].at[token_slot, token_wpos].set(
         k_new[0].astype(cache["k"].dtype), mode="drop")
@@ -190,7 +196,7 @@ def gqa_packed(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
     k_cache = shard(k_cache, "batch", "kv_seq", "act_kv_heads", None)
     v_cache = shard(v_cache, "batch", "kv_seq", "act_kv_heads", None)
     out = ops.packed_attention(q[0], k_cache, v_cache, token_slot,
-                               positions[0] + 1)
+                               positions[0] + 1, kv_bucket=kv_bucket)
     y = jnp.einsum("thk,hkd->td", out, p["wo"])[None]
     y = shard(y, "batch", "act_seq", "embed")
     return y, {"k": k_cache, "v": v_cache}
@@ -366,11 +372,17 @@ def mla_prefill_chunk(cfg: ModelConfig, p: dict, x: jax.Array,
 
 
 def mla_packed(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
-               cache: dict, token_slot: jax.Array, token_wpos: jax.Array):
+               cache: dict, token_slot: jax.Array, token_wpos: jax.Array,
+               kv_bucket: Optional[int] = None):
     """Token-packed step for MLA (DESIGN.md §8): scatter each token's
     latents at ``(slot, wpos)``, attend absorbed queries over the slot's
     latent cache with the segment/length mask.  Same absorbed association
-    order as every other MLA path."""
+    order as every other MLA path.  ``d_v != d_qk`` (latent rank vs
+    rank + rope) is handled natively by the packed-attention kernel.
+
+    ``kv_bucket`` (static, DESIGN.md §9) slices the latent views *before*
+    the absorbed-key concat, so the materialized (N, S, rank + rope) key
+    tensor also scales with the bucket, not ``max_len``."""
     m = cfg.mla
     q_abs = _mla_q_absorbed(cfg, p, x, positions)        # (1,T,H,rank+rope)
     c_new, r_new = _mla_latent(cfg, p, x, positions)
@@ -379,8 +391,12 @@ def mla_packed(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
     krp = cache["k_rope"].at[token_slot, token_wpos].set(
         r_new[0].astype(cache["k_rope"].dtype), mode="drop")
     ckv = shard(ckv, "batch", "kv_seq", None)
-    k_abs = jnp.concatenate([ckv, krp], axis=-1)[:, :, None, :]
-    v_lat = ckv[:, :, None, :]
+    ckv_v, krp_v = ckv, krp
+    if kv_bucket is not None and kv_bucket < ckv.shape[1]:
+        ckv_v = jax.lax.slice_in_dim(ckv, 0, kv_bucket, axis=1)
+        krp_v = jax.lax.slice_in_dim(krp, 0, kv_bucket, axis=1)
+    k_abs = jnp.concatenate([ckv_v, krp_v], axis=-1)[:, :, None, :]
+    v_lat = ckv_v[:, :, None, :]
     scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
     out_lat = ops.packed_attention(q_abs[0], k_abs, v_lat, token_slot,
                                    positions[0] + 1, logit_scale=scale)

@@ -350,7 +350,8 @@ def forward_chunk(cfg: ModelConfig, params: dict, tokens: jax.Array,
 # ---------------------------------------------------------------------------
 def forward_packed(cfg: ModelConfig, params: dict, tokens: jax.Array,
                    cache: list, token_slot: jax.Array, token_pos: jax.Array,
-                   token_wpos: jax.Array, token_active: jax.Array):
+                   token_wpos: jax.Array, token_active: jax.Array,
+                   kv_bucket: Optional[int] = None):
     """One iteration's *entire* model work as a single program (DESIGN.md
     §8): the decode tokens (one per decoding slot) and every scheduled
     prefill chunk are packed into one ``(1, T)`` token stream with per-token
@@ -368,8 +369,11 @@ def forward_packed(cfg: ModelConfig, params: dict, tokens: jax.Array,
     applies a segment-aware mask — a token attends rows ``[0, pos]`` of its
     own slot only, so segments never attend across each other; recurrent
     mixers advance per-slot state through a token scan with active-masking.
-    ``T`` is the only shape parameter, so the engine's jit compile cache is
-    bounded by the scheduler's discrete dense sizes.
+    ``kv_bucket`` (static, DESIGN.md §9): upper bound on this iteration's
+    ``max(token_pos) + 1`` — attention reads only that many cache rows per
+    slot, so its cost scales with actual context.  ``T`` and ``kv_bucket``
+    are the only shape parameters, so the engine's jit compile cache is
+    bounded by |discrete dense sizes| × |kv buckets|.
 
     Returns (logits (1, T, vocab[, K]), new_cache).
     """
@@ -387,7 +391,7 @@ def forward_packed(cfg: ModelConfig, params: dict, tokens: jax.Array,
                 x, c = blocks.block_packed(cfg, spec, layer_p[f"sub{i}"], x,
                                            positions, layer_c[f"sub{i}"],
                                            token_slot, token_wpos,
-                                           token_active)
+                                           token_active, kv_bucket=kv_bucket)
                 new_c[f"sub{i}"] = c
             return x, new_c
 

@@ -16,8 +16,11 @@ on-device.  Exactly one model dispatch and one device→host transfer per
 iteration (``EngineStats.model_dispatches`` / ``host_syncs``), vs the
 legacy path's ``1 + K`` dispatches with a blocking sync per chunk.  ``T``
 is bucketed to the scheduler's discrete dense sizes, so
-``BatchPlan.dense_batch`` is the *actual launched shape* and the compile
-cache is bounded by ``len(discrete_sizes) + 1`` (the ``max_active`` floor
+``BatchPlan.dense_batch`` is the *actual launched shape*; the iteration's
+max KV extent is quantized to a KV-length bucket grid (DESIGN.md §9) and
+passed statically into the step, so attention sweeps ``kv_bucket`` cache
+rows per slot instead of ``max_len`` and the compile cache is bounded by
+``(len(discrete_sizes) + 1) × len(kv_buckets)`` (the ``max_active`` floor
 bucket for decode-only iterations, DESIGN.md §8).  Segment order inside
 the stream follows the nano-batch interleave
 (``core/nanobatch.packed_segment_order``), so the interleave governs the
@@ -45,11 +48,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ATTN, ModelConfig
+from repro.kernels import ops
 from repro.models import model as model_lib
 from repro.serving import sampling
 from repro.serving.kvcache import PagedKVManager
 from repro.serving.request import Request
-from repro.serving.scheduler import BatchPlan, GlobalBatchScheduler
+from repro.serving.scheduler import (BatchPlan, GlobalBatchScheduler,
+                                     default_kv_buckets)
 
 
 @dataclasses.dataclass
@@ -67,6 +72,12 @@ class EngineStats:
     host_syncs: int = 0              # blocking device→host result transfers
     packed_pad_tokens: int = 0       # bucketing padding launched (packed step)
     dense_batch_hist: dict[int, int] = dataclasses.field(default_factory=dict)
+    # iterations per launched KV-length bucket (DESIGN.md §9; packed step)
+    kv_bucket_hist: dict[int, int] = dataclasses.field(default_factory=dict)
+    # Σ launch_tokens × kv_bucket — the packed-attention score-work actually
+    # launched; compare against launch_tokens × max_len to see the bucketing
+    # saving (attention FLOPs/bytes scale with this, not with max_len)
+    packed_attn_kv_rows: int = 0
 
     @property
     def total_tokens(self) -> int:
@@ -100,6 +111,10 @@ class ServeEngine:
                  prefill_mode: str = "incremental",
                  step_mode: Optional[str] = None,
                  nano: int = 2,
+                 kv_buckets: Optional[tuple[int, ...]] = None,
+                 kv_bucketing: bool = True,
+                 attn_fast: Optional[bool] = None,
+                 attn_stream: Optional[bool] = None,
                  seed: int = 0):
         assert prefill_mode in ("incremental", "recompute"), prefill_mode
         if step_mode is None:
@@ -117,6 +132,26 @@ class ServeEngine:
         self.step_mode = step_mode
         self.nano = nano
         self.key = jax.random.PRNGKey(seed)
+        # §Perf HC3 toggles, promoted from trace-time env reads (a retrace
+        # footgun) to explicit arguments: resolved ONCE here (env is only
+        # the fallback default) and pinned around every jitted trace body,
+        # so a later env flip can never silently change a retrace
+        self.attn_fast = ops.attn_fast_default() if attn_fast is None \
+            else bool(attn_fast)
+        self.attn_stream = ops.attn_stream_default() if attn_stream is None \
+            else bool(attn_stream)
+        # KV-length bucket grid (DESIGN.md §9): the packed step sweeps only
+        # the iteration's bucket, not max_len; kv_bucketing=False pins the
+        # single max_len bucket (the pre-§9 dense-vs-full-cache behaviour,
+        # kept for A/B)
+        if not kv_bucketing:
+            self.kv_buckets = (max_len,)
+        elif kv_buckets is None:
+            self.kv_buckets = default_kv_buckets(max_len)
+        else:
+            grid = tuple(sorted({min(b, max_len) for b in kv_buckets}))
+            self.kv_buckets = grid if grid[-1] == max_len \
+                else grid + (max_len,)
 
         hd = cfg.resolved_head_dim
         n_attn = max(sum(1 for s in cfg.layer_specs() if s.mixer == ATTN), 1)
@@ -126,7 +161,8 @@ class ServeEngine:
                                  bytes_per_token=kv_bytes,
                                  avg_decode_len=avg_decode_len)
         self.scheduler = GlobalBatchScheduler(
-            self.kv, discrete_sizes=discrete_sizes, max_active=max_slots)
+            self.kv, discrete_sizes=discrete_sizes, max_active=max_slots,
+            kv_buckets=self.kv_buckets)
 
         # slot caches: model cache trees with leading batch = max_slots
         self.cache = model_lib.init_cache(cfg, 1, max_slots, max_len)
@@ -141,9 +177,11 @@ class ServeEngine:
         # reused slot never leaks the previous request's recurrent state
         self._slot_init = model_lib.init_cache(cfg, 1, 1, max_len)
 
-        # one compiled program per bucketed launch length T — the compile
-        # cache is bounded by the scheduler's discrete dense sizes
-        self._packed_step = jax.jit(self._packed_impl, donate_argnums=(1,))
+        # one compiled program per (bucketed launch length T, kv bucket) —
+        # the compile cache is bounded by |discrete dense sizes| × |kv
+        # buckets| (kv_bucket is static: it sets the swept cache extent)
+        self._packed_step = jax.jit(self._packed_impl, donate_argnums=(1,),
+                                    static_argnums=(9,))
         self._decode_step = jax.jit(self._decode_impl, donate_argnums=(1,))
         # one compiled program per bucketed chunk length (scheduler-quantized)
         self._prefill_step = jax.jit(self._prefill_impl, donate_argnums=(1,))
@@ -151,8 +189,9 @@ class ServeEngine:
 
     # ---- jitted decode over all slots (static shapes) -----------------------
     def _decode_impl(self, params, cache, tokens, cache_len, active):
-        logits, new_cache = model_lib.forward_decode(
-            self.cfg, params, tokens, cache, cache_len)
+        with ops.attn_config(fast=self.attn_fast, stream=self.attn_stream):
+            logits, new_cache = model_lib.forward_decode(
+                self.cfg, params, tokens, cache, cache_len)
         next_tok = sampling.greedy(logits)
         # Mask the *recurrent* state update to decoding slots: a mid-prefill
         # slot's carried SSM/LSTM state must not be advanced by its garbage
@@ -184,8 +223,9 @@ class ServeEngine:
         sub = jax.tree.map(
             lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1),
             cache)
-        logits, new_sub = model_lib.forward_chunk(
-            self.cfg, params, tokens, sub, offset[None])
+        with ops.attn_config(fast=self.attn_fast, stream=self.attn_stream):
+            logits, new_sub = model_lib.forward_chunk(
+                self.cfg, params, tokens, sub, offset[None])
         new_cache = jax.tree.map(
             lambda c, s: jax.lax.dynamic_update_slice_in_dim(
                 c, s.astype(c.dtype), slot, axis=1),
@@ -194,15 +234,19 @@ class ServeEngine:
 
     # ---- jitted token-packed step (one dispatch per iteration) --------------
     def _packed_impl(self, params, cache, tokens, token_slot, token_pos,
-                     token_wpos, token_active, cache_len, reset):
+                     token_wpos, token_active, cache_len, reset, kv_bucket):
         """The whole iteration as one program (DESIGN.md §8): reset reused
         slots' recurrent state, run the packed multi-segment forward, sample
         greedily on-device, and advance ``cache_len`` from the per-token
-        metadata — so the only device→host transfer is the sampled tokens."""
+        metadata — so the only device→host transfer is the sampled tokens.
+        ``kv_bucket`` is static (DESIGN.md §9): attention sweeps only that
+        many cache rows per slot, so the program's attention cost tracks the
+        iteration's actual context, not ``max_len``."""
         cache = self._reset_recurrent(cache, reset)
-        logits, new_cache = model_lib.forward_packed(
-            self.cfg, params, tokens, cache, token_slot, token_pos,
-            token_wpos, token_active)
+        with ops.attn_config(fast=self.attn_fast, stream=self.attn_stream):
+            logits, new_cache = model_lib.forward_packed(
+                self.cfg, params, tokens, cache, token_slot, token_pos,
+                token_wpos, token_active, kv_bucket=kv_bucket)
         next_tok = sampling.greedy(logits[0])
         new_len = jnp.where(reset, 0, cache_len)
         new_len = new_len.at[token_slot].max(
@@ -301,6 +345,16 @@ class ServeEngine:
         # padding tokens write out of bounds -> the scatter drops them
         wpos = np.where(active, pos, self.max_len).astype(np.int32)
 
+        # iteration's KV-length bucket (DESIGN.md §9): every attended row
+        # must sit below it — the scheduler quantized the max extent up
+        kv_bucket = packed.kv_bucket if packed.kv_bucket is not None \
+            else self.max_len
+        assert not active.any() or int(pos[active].max()) < kv_bucket, \
+            (int(pos[active].max()), kv_bucket)
+        self.stats.kv_bucket_hist[kv_bucket] = \
+            self.stats.kv_bucket_hist.get(kv_bucket, 0) + 1
+        self.stats.packed_attn_kv_rows += packed.launch_tokens * kv_bucket
+
         tok_in = jnp.asarray(tokens[None])
         if self.cfg.frontend == "audio":
             tok_in = jnp.repeat(tok_in[..., None], self.cfg.num_codebooks,
@@ -308,7 +362,7 @@ class ServeEngine:
         next_tok, self.cache, self.cache_len = self._packed_step(
             self.params, self.cache, tok_in, jnp.asarray(slot),
             jnp.asarray(pos), jnp.asarray(wpos), jnp.asarray(active),
-            self.cache_len, jnp.asarray(reset))
+            self.cache_len, jnp.asarray(reset), kv_bucket)
         self.stats.model_dispatches += 1
         nt = np.asarray(next_tok)          # the iteration's one D2H transfer
         self.stats.host_syncs += 1
@@ -413,8 +467,9 @@ class ServeEngine:
         tok_in = jnp.asarray(toks)
         if cfg.frontend == "audio":
             tok_in = jnp.repeat(tok_in[..., None], cfg.num_codebooks, axis=-1)
-        logits, _aux, states = model_lib.forward_full(
-            cfg, self.params, tok_in, return_states=True)
+        with ops.attn_config(fast=self.attn_fast, stream=self.attn_stream):
+            logits, _aux, states = model_lib.forward_full(
+                cfg, self.params, tok_in, return_states=True)
         self.stats.model_dispatches += 1
         self._scatter_states(r.slot, states)
         self.cache_len = self.cache_len.at[r.slot].set(upto)

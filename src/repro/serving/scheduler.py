@@ -53,17 +53,34 @@ class PackedSegment:
 class PackedPlan:
     """Token-packed launch layout for one iteration: segments in nano-batch
     interleave order, plus the bucketed launch length (the *actual* compiled
-    shape — the paper's discrete-batching insight applied end-to-end)."""
+    shape — the paper's discrete-batching insight applied end-to-end) and
+    the iteration's KV-length bucket (DESIGN.md §9)."""
     segments: list[PackedSegment]
     tokens: int                     # real tokens (== BatchPlan.dense_tokens)
     launch_tokens: int              # bucketed T the program is compiled for
     dense_batch: int                # the discrete size the plan targeted
     nano: NanoBatchPlan             # nano-batch split of the launched stream
     segment_nano: tuple[int, ...]   # nano-batch id per segment
+    kv_bucket: Optional[int] = None  # quantized max KV extent this iteration
+    kv_needed: int = 0              # exact max KV extent (diagnostics)
 
     @property
     def padding(self) -> int:
         return self.launch_tokens - self.tokens
+
+
+def default_kv_buckets(max_len: int, floor: int = 64) -> tuple[int, ...]:
+    """Power-of-two KV-length grid up to ``max_len`` (DESIGN.md §9):
+    ``(64, 128, 256, ..., max_len)``.  Coarse enough that the packed-step
+    compile cache stays small (|T buckets| × |kv buckets| programs), fine
+    enough that short-context iterations never sweep the whole cache."""
+    b = min(floor, max_len)
+    out = []
+    while b < max_len:
+        out.append(b)
+        b *= 2
+    out.append(max_len)
+    return tuple(out)
 
 
 class GlobalBatchScheduler:
@@ -71,10 +88,15 @@ class GlobalBatchScheduler:
                  discrete_sizes: tuple[int, ...] = (2048, 1024, 512, 256, 128,
                                                     64, 32, 16, 8),
                  max_active: int = 256,
-                 prefill_chunk_min: int = 8):
+                 prefill_chunk_min: int = 8,
+                 kv_buckets: Optional[tuple[int, ...]] = None):
         self.kv = kv
         self.sizes = tuple(sorted(discrete_sizes, reverse=True))
         self.max_active = max_active
+        # KV-length grid (DESIGN.md §9), ascending; None disables bucketing
+        # (PackedPlan.kv_bucket stays None -> the engine sweeps max_len)
+        self.kv_buckets = (tuple(sorted(set(kv_buckets)))
+                          if kv_buckets else None)
         # chunk lengths are quantized to the discrete sizes; raising the
         # floor to the smallest size means the only unbucketed lengths are
         # terminal remainders < chunk_min, keeping the engine's jit compile
@@ -163,12 +185,34 @@ class GlobalBatchScheduler:
                 return s
         return -(-tokens // self.sizes[0]) * self.sizes[0]
 
+    def bucket_kv(self, needed: int) -> int:
+        """Quantize an iteration's max KV extent up to the kv-bucket grid
+        (DESIGN.md §9) — the smallest bucket that covers it, saturating at
+        the top of the grid (== the engine's ``max_len``)."""
+        assert self.kv_buckets, "scheduler constructed without kv_buckets"
+        for s in self.kv_buckets:
+            if needed <= s:
+                return s
+        return self.kv_buckets[-1]
+
+    def _kv_needed(self, segs: list[PackedSegment]) -> int:
+        """Exact max KV extent this iteration's attention touches: a decode
+        segment writes at position ``total_tokens - 1`` (prompt + sampled
+        outputs so far) and attends ``total_tokens`` rows; a prefill chunk
+        attends ``offset + length`` rows."""
+        needed = 1
+        for s in segs:
+            needed = max(needed, s.req.total_tokens if s.is_decode
+                         else s.offset + s.length)
+        return needed
+
     def pack(self, plan: BatchPlan, *, nano: int = 2) -> PackedPlan:
         """Lay one iteration's decode tokens + prefill chunks out as a
         token-packed stream: segments ordered by the nano-batch interleave
         (core/nanobatch.packed_segment_order — memory-bound decode first,
         compute-bound chunks in descending length), launch length bucketed
-        to the discrete dense sizes, padding accounted."""
+        to the discrete dense sizes, the max KV extent quantized to the
+        kv-bucket grid, padding accounted."""
         segs = [PackedSegment(req=r, offset=-1, length=1, is_decode=True)
                 for r in plan.decode]
         segs += [PackedSegment(req=c.req, offset=c.offset, length=c.length,
@@ -182,10 +226,14 @@ class GlobalBatchScheduler:
         nano_plan = nano_batch_sizes_for(launch, nano)
         self.padding_tokens += launch - tokens
         self.launched_tokens += launch
+        kv_needed = self._kv_needed(segs)
         return PackedPlan(segments=segs, tokens=tokens, launch_tokens=launch,
                           dense_batch=plan.dense_batch, nano=nano_plan,
                           segment_nano=nano_plan.assign_segments(
-                              [s.length for s in segs]))
+                              [s.length for s in segs]),
+                          kv_bucket=(self.bucket_kv(kv_needed)
+                                     if self.kv_buckets else None),
+                          kv_needed=kv_needed)
 
     # ---- post-iteration bookkeeping -------------------------------------------
     def commit(self, plan: BatchPlan, sampled: dict[int, int],

@@ -1,0 +1,265 @@
+"""Packed-attention kernel + KV-length bucketing (DESIGN.md §9).
+
+Covers the tentpole invariants:
+  * Pallas (interpret=True) packed attention == the XLA ref across GQA and
+    absorbed-MLA shapes (incl. ``d_v != d_qk``), f32 and bf16;
+  * ``ops.packed_attention`` dispatches ``impl`` for real — the MLA
+    ``d_v != d_qk`` case runs the Pallas kernel, no silent ref downgrade;
+  * kv-bucket slicing is exact at and around bucket boundaries, in the ref,
+    the kernel, and the scheduler's quantizer;
+  * engine end-to-end: kv-bucketed packed step == dense max_len sweep ==
+    legacy step (f32 per the known bf16-nondeterminism constraint), with a
+    request crossing a bucket edge mid-decode;
+  * the packed compile cache is bounded by |T buckets| × |kv buckets| and
+    the kv-bucket histogram records what launched;
+  * the §Perf-HC3 env toggles are now explicit engine arguments (env is
+    only the construction-time fallback — no trace-time env reads).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, scale_down
+from repro.kernels import ops, ref
+from repro.kernels import packed_attention as pa
+from repro.models import model
+from repro.serving.engine import ServeEngine
+from repro.serving.kvcache import PagedKVManager
+from repro.serving.request import Request
+from repro.serving.scheduler import GlobalBatchScheduler, default_kv_buckets
+
+RNG = np.random.default_rng(7)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-5, atol=2e-5)
+
+
+def _case(t, n, s, h, kv, d_qk, d_v, dtype):
+    q = jnp.asarray(RNG.normal(size=(t, h, d_qk)), dtype)
+    k = jnp.asarray(RNG.normal(size=(n, s, kv, d_qk)), dtype)
+    v = jnp.asarray(RNG.normal(size=(n, s, kv, d_v)), dtype)
+    slot = jnp.asarray(RNG.integers(0, n, size=t), jnp.int32)
+    lens = jnp.asarray(RNG.integers(1, s + 1, size=t), jnp.int32)
+    return q, k, v, slot, lens
+
+
+# ---------------------------------------------------------------------------
+# kernel parity: pallas-interpret vs XLA ref
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("t,n,s,h,kv,d_qk,d_v", [
+    (10, 3, 64, 4, 2, 32, 32),       # GQA
+    (7, 2, 48, 8, 8, 16, 16),        # MHA
+    (5, 4, 40, 4, 1, 16, 16),        # MQA, ragged S
+])
+def test_packed_attention_parity_gqa(t, n, s, h, kv, d_qk, d_v, dtype):
+    q, k, v, slot, lens = _case(t, n, s, h, kv, d_qk, d_v, dtype)
+    out = pa.packed_attention(q, k, v, slot, lens, block_k=16, interpret=True)
+    want = ref.packed_attention_ref(q, k, v, slot, lens)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_packed_attention_parity_mla_dv_neq_dqk(dtype):
+    """Absorbed MLA attends with d_qk = rank + rope but d_v = rank — the
+    kernel must handle the mismatch (it used to silently fall back)."""
+    t, n, s, h, d_qk, d_v = 6, 3, 48, 4, 24, 16
+    q, k, v, slot, lens = _case(t, n, s, h, 1, d_qk, d_v, dtype)
+    scale = d_qk ** -0.5
+    out = pa.packed_attention(q, k, v, slot, lens, logit_scale=scale,
+                              block_k=16, interpret=True)
+    want = ref.packed_attention_ref(q, k, v, slot, lens, logit_scale=scale)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_ops_dispatch_is_real(monkeypatch):
+    """``ops.packed_attention(impl=...)`` routes to the Pallas kernel —
+    including the ``d_v != d_qk`` case — instead of discarding ``impl``."""
+    calls = []
+    real = pa.packed_attention
+
+    def spy(*args, **kwargs):
+        calls.append(kwargs.get("interpret"))
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(pa, "packed_attention", spy)
+    q, k, v, slot, lens = _case(5, 2, 32, 4, 1, 24, 16, jnp.float32)
+    scale = 24 ** -0.5
+    got = ops.packed_attention(q, k, v, slot, lens, logit_scale=scale,
+                               impl="interpret")
+    assert calls == [True]
+    want = ops.packed_attention(q, k, v, slot, lens, logit_scale=scale,
+                                impl="ref")
+    assert calls == [True]                      # ref path never touches pa
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# kv-bucket correctness at bucket boundaries
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("bucket,max_lens", [
+    (32, 32),        # every length exactly at the bucket edge
+    (32, 31),        # strictly inside
+    (64, 33),        # one past the previous bucket edge -> needs the next
+])
+def test_kv_bucket_slicing_exact(bucket, max_lens):
+    t, n, s, h, kv, d = 8, 3, 64, 4, 2, 16
+    q, k, v, slot, _ = _case(t, n, s, h, kv, d, d, jnp.float32)
+    lens = jnp.asarray(RNG.integers(1, max_lens + 1, size=t)
+                       .clip(max=max_lens), jnp.int32)
+    lens = lens.at[0].set(max_lens)             # hit the boundary for sure
+    full = ref.packed_attention_ref(q, k, v, slot, lens)
+    sliced = ref.packed_attention_ref(q, k, v, slot, lens, kv_bucket=bucket)
+    np.testing.assert_allclose(np.asarray(sliced), np.asarray(full),
+                               rtol=1e-6, atol=1e-6)
+    kern = pa.packed_attention(q, k, v, slot, lens, kv_bucket=bucket,
+                               block_k=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(full),
+                               rtol=1e-5, atol=2e-5)
+
+
+def test_scheduler_bucket_kv_boundaries():
+    kvm = PagedKVManager(total_pages=64, page_size=8, bytes_per_token=64,
+                         avg_decode_len=8)
+    sched = GlobalBatchScheduler(kvm, discrete_sizes=(16, 8), max_active=8,
+                                 kv_buckets=(32, 64, 128))
+    assert sched.bucket_kv(1) == 32
+    assert sched.bucket_kv(32) == 32             # exactly at the edge
+    assert sched.bucket_kv(33) == 64             # one past the edge
+    assert sched.bucket_kv(64) == 64
+    assert sched.bucket_kv(65) == 128
+    assert sched.bucket_kv(10_000) == 128        # saturates at max_len
+    # no grid -> pack() reports kv_bucket=None (engine sweeps max_len)
+    plain = GlobalBatchScheduler(kvm, discrete_sizes=(16, 8), max_active=8)
+    plain.submit(Request(rid=0, prompt=list(range(11)), max_new_tokens=1))
+    packed = plain.pack(plain.plan())
+    assert packed.kv_bucket is None
+    # first plan chunks the first 8 prompt tokens -> KV extent 8
+    assert packed.kv_needed == 8
+
+
+def test_default_kv_buckets_grid():
+    assert default_kv_buckets(512) == (64, 128, 256, 512)
+    assert default_kv_buckets(520) == (64, 128, 256, 512, 520)
+    assert default_kv_buckets(128) == (64, 128)
+    assert default_kv_buckets(48) == (48,)
+
+
+# ---------------------------------------------------------------------------
+# engine end-to-end: bucketed == dense == legacy (f32: bf16 accumulation-
+# order diffs + MoE routing would flip argmax between execution paths)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["tiny-toy", "deepseek-v2-236b"])
+def test_engine_kv_bucketing_matches_dense_and_legacy(arch):
+    cfg = get_config(arch) if arch == "tiny-toy" else scale_down(
+        get_config(arch))
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, capacity_factor=16.0))
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    # prompt 30 + 4 decode tokens crosses the 32-bucket edge mid-decode
+    # (context 31..34); prompt 12 stays inside the smallest bucket
+    prompts = [list(rng.integers(0, cfg.vocab_size, size=n))
+               for n in (30, 12, 7)]
+    outs = {}
+    for name, kw in [("bucketed", dict(kv_buckets=(32, 64))),
+                     ("dense", dict(kv_bucketing=False)),
+                     ("legacy", dict(step_mode="legacy"))]:
+        eng = ServeEngine(cfg, params, max_slots=2, max_len=64,
+                          discrete_sizes=(16, 8), avg_decode_len=4, **kw)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=list(p), max_new_tokens=4))
+        done = eng.run()
+        assert len(done) == len(prompts)
+        outs[name] = {r.rid: r.output for r in done}
+        if name == "bucketed":
+            # both edge-straddling buckets really launched
+            assert set(eng.stats.kv_bucket_hist) == {32, 64}
+    assert outs["bucketed"] == outs["dense"]
+    assert outs["bucketed"] == outs["legacy"]
+
+
+def test_packed_compile_cache_bounded_by_t_times_kv_buckets():
+    """Acceptance criterion: the packed program is keyed by (T bucket,
+    kv bucket) only, so the compile cache is ≤ |T buckets| × |kv buckets| —
+    and attention work tracked the buckets, not max_len."""
+    cfg = get_config("tiny-toy")
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    sizes = (32, 16, 8)
+    kv_grid = (32, 64, 128)
+    eng = ServeEngine(cfg, params, max_slots=4, max_len=128,
+                      discrete_sizes=sizes, avg_decode_len=4,
+                      kv_buckets=kv_grid)
+    rng = np.random.default_rng(5)
+    for i in range(10):
+        eng.submit(Request(
+            rid=i,
+            prompt=list(rng.integers(0, cfg.vocab_size,
+                                     size=int(rng.integers(3, 60)))),
+            max_new_tokens=3))
+    eng.run()
+    assert eng.kv_buckets == kv_grid
+    # len(sizes) + the max_active floor bucket, × the kv grid
+    assert eng._packed_step._cache_size() <= (len(sizes) + 1) * len(kv_grid)
+    assert set(eng.stats.kv_bucket_hist) <= set(kv_grid)
+    # short contexts actually used the small buckets: the launched
+    # attention sweep is strictly less than a max_len sweep every iteration
+    launched = sum(eng.stats.kv_bucket_hist.values())
+    assert launched == eng.stats.iterations
+    assert min(eng.stats.kv_bucket_hist) < eng.max_len
+    assert eng.stats.packed_attn_kv_rows < \
+        eng.scheduler.launched_tokens * eng.max_len
+
+
+# ---------------------------------------------------------------------------
+# §Perf HC3 toggle promotion: explicit args, env only as fallback default
+# ---------------------------------------------------------------------------
+def test_attn_toggles_resolved_at_engine_construction(monkeypatch):
+    cfg = get_config("tiny-toy")
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    monkeypatch.delenv("REPRO_ATTN_FAST", raising=False)
+    monkeypatch.delenv("REPRO_ATTN_STREAM", raising=False)
+    assert ServeEngine(cfg, params).attn_fast is False
+    # explicit argument wins over env...
+    monkeypatch.setenv("REPRO_ATTN_FAST", "1")
+    eng = ServeEngine(cfg, params, attn_fast=False, attn_stream=True)
+    assert eng.attn_fast is False and eng.attn_stream is True
+    # ...env is the fallback, captured once at construction
+    eng2 = ServeEngine(cfg, params)
+    assert eng2.attn_fast is True
+    monkeypatch.setenv("REPRO_ATTN_FAST", "0")
+    assert eng2.attn_fast is True                # no trace-time env re-read
+
+
+def test_attn_config_context_pins_and_restores():
+    assert ops.attn_fast_default() in (False, True)
+    before = (ops.attn_fast_default(), ops.attn_stream_default())
+    with ops.attn_config(fast=True, stream=True):
+        assert ops.attn_fast_default() is True
+        assert ops.attn_stream_default() is True
+    assert (ops.attn_fast_default(), ops.attn_stream_default()) == before
+
+
+def test_ops_fast_kwarg_selects_variant(monkeypatch):
+    """The explicit ``fast`` kwarg picks the ref variant regardless of env."""
+    monkeypatch.setenv("REPRO_ATTN_FAST", "1")
+    called = []
+    monkeypatch.setattr(ref, "packed_attention_ref",
+                        lambda *a, **k: called.append("ref"))
+    monkeypatch.setattr(ref, "packed_attention_fast",
+                        lambda *a, **k: called.append("fast"))
+    q, k, v, slot, lens = _case(2, 2, 8, 2, 1, 8, 8, jnp.float32)
+    ops.packed_attention(q, k, v, slot, lens, impl="ref", fast=False)
+    ops.packed_attention(q, k, v, slot, lens, impl="ref", fast=True)
+    ops.packed_attention(q, k, v, slot, lens, impl="ref")   # env fallback
+    assert called == ["ref", "fast", "fast"]
