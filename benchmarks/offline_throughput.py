@@ -63,13 +63,16 @@ def _submit_workload(eng, name: str, p: int, d: int, n_requests: int,
                            max_new_tokens=min(dlen, d_cap)))
 
 
-# step-mode A/B matrix (DESIGN.md §8-§9): the kv-bucketed token-packed
-# single-dispatch step vs the same step sweeping the full max_len cache
-# (the pre-§9 packed baseline), vs the legacy decode-then-per-chunk step,
-# plus the O(p²/chunk) recompute baseline
+# step-mode A/B matrix (DESIGN.md §8-§10): the async pipelined packed step
+# (scheduling overlaps device compute, sampled tokens synced one iteration
+# late) vs the same step retired eagerly, vs the packed step sweeping the
+# full max_len cache (the pre-§9 baseline), vs the legacy
+# decode-then-per-chunk step, plus the O(p²/chunk) recompute baseline
 ENGINE_MODES = [
-    ("packed", {"step_mode": "packed"}),
-    ("packed-dense-kv", {"step_mode": "packed", "kv_bucketing": False}),
+    ("packed-async", {"step_mode": "packed", "async_depth": 1}),
+    ("packed", {"step_mode": "packed", "async_depth": 0}),
+    ("packed-dense-kv", {"step_mode": "packed", "async_depth": 0,
+                         "kv_bucketing": False}),
     ("legacy", {"step_mode": "legacy"}),
     ("recompute", {"step_mode": "legacy", "prefill_mode": "recompute"}),
 ]
@@ -77,19 +80,22 @@ ENGINE_MODES = [
 
 def engine_measured(n_requests: int = 16, attn_fast=None,
                     attn_stream=None) -> list[dict]:
-    """Real engine runs, A/B-ing the kv-bucketed token-packed step
-    (DESIGN.md §9) against the same packed step sweeping the full
-    ``max_len`` cache every iteration (the PR-2/DESIGN.md-§8 baseline,
-    ``kv_bucketing=False`` — both run exactly 1 dispatch + 1 sync per
-    iteration, so any difference is attention work), the legacy decode +
-    per-chunk step, and the prefix-recompute baseline (O(p²/chunk),
-    DESIGN.md §7).  Each mode runs the workload twice and reports the
-    second (warmed) pass, so XLA compile time — which differs between the
-    modes' compile-cache footprints — doesn't pollute the A/B.  Reported
-    per mode: tokens/s, dispatches/iteration, host syncs/iteration,
-    prefill expansion, the packed step's bucketing-padding fraction, the
-    kv-bucket histogram, and the attention-sweep fraction (swept rows /
-    max_len rows — the FLOPs/bytes saving of §9)."""
+    """Real engine runs, A/B-ing the asynchronously pipelined packed step
+    (DESIGN.md §10, ``async_depth=1`` — iteration i+1 is formed and
+    launched before iteration i's sampled tokens are retrieved) against
+    the eager kv-bucketed packed step, the same packed step sweeping the
+    full ``max_len`` cache every iteration (the PR-2/DESIGN.md-§8
+    baseline, ``kv_bucketing=False``), the legacy decode + per-chunk
+    step, and the prefix-recompute baseline (O(p²/chunk), DESIGN.md §7).
+    Each mode runs the workload twice and reports the second (warmed)
+    pass, so XLA compile time — which differs between the modes'
+    compile-cache footprints — doesn't pollute the A/B.  Reported per
+    mode: tokens/s, dispatches/iteration, host syncs/iteration, prefill
+    expansion, the packed step's bucketing-padding fraction, the
+    kv-bucket histogram, the attention-sweep fraction (swept rows /
+    max_len rows — the FLOPs/bytes saving of §9), and the §10 overlap
+    split (blocking syncs/iteration, blocked/host/dispatch seconds,
+    speculative overshoot tokens)."""
     cfg = get_config("tiny-toy")
     params = model.init(cfg, jax.random.PRNGKey(0))
     flops_fwd = 2 * model.active_params(cfg)
@@ -120,6 +126,7 @@ def engine_measured(n_requests: int = 16, attn_fast=None,
                 eng.stats,
                 dense_batch_hist=dict(eng.stats.dense_batch_hist),
                 kv_bucket_hist=dict(eng.stats.kv_bucket_hist))
+            warm_drop = eng.scheduler.dropped_tokens
             # measured pass
             _submit_workload(eng, name, p, d, n_req, cfg.vocab_size,
                              n_req, p_cap=p_cap, d_cap=d_cap)
@@ -128,6 +135,7 @@ def engine_measured(n_requests: int = 16, attn_fast=None,
                 eng.stats,
                 dense_batch_hist=dict(eng.stats.dense_batch_hist),
                 kv_bucket_hist=dict(eng.stats.kv_bucket_hist))
+            dropped = eng.scheduler.dropped_tokens - warm_drop
             tokens = st.total_tokens - warm.total_tokens
             wall = st.wall_time - warm.wall_time
             # second measured pass, best-of taken: single-core CPU wall
@@ -176,6 +184,18 @@ def engine_measured(n_requests: int = 16, attn_fast=None,
                 "attn_kv_sweep_frac": round(
                     kv_rows / max((tokens + pad) * eng.max_len, 1), 3)
                 if kv_iters else None,
+                # §10 host/device overlap split (measured pass): how often
+                # the deferred sync actually stalled the host, and where
+                # the wall clock went
+                "async_depth": eng.async_depth,
+                "blocking_syncs_per_iter": round(
+                    (st.blocking_syncs - warm.blocking_syncs)
+                    / max(iters, 1), 3),
+                "blocked_sync_s": round(
+                    st.blocked_sync_time - warm.blocked_sync_time, 3),
+                "host_s": round(st.host_time - warm.host_time, 3),
+                "dispatch_s": round(st.dispatch_time - warm.dispatch_time, 3),
+                "overshoot_tokens": dropped,
             }
         pk, leg = per_mode["packed"], per_mode["legacy"]
         pk["speedup_vs_dense_kv"] = round(
@@ -186,6 +206,11 @@ def engine_measured(n_requests: int = 16, attn_fast=None,
         pk["speedup_vs_recompute"] = round(
             pk["_tok_s_raw"] / max(per_mode["recompute"]["_tok_s_raw"], 1e-9),
             3)
+        # §10 async-vs-eager axis: same packed program, same dispatch/sync
+        # counts — the delta is the host/device overlap
+        per_mode["packed-async"]["speedup_vs_eager"] = round(
+            per_mode["packed-async"]["_tok_s_raw"]
+            / max(pk["_tok_s_raw"], 1e-9), 3)
         for r in per_mode.values():
             r.pop("_tok_s_raw")
         rows += list(per_mode.values())
@@ -236,6 +261,13 @@ def main(argv=None) -> None:
                 extra = (f" [{r['speedup_vs_dense_kv']}x vs dense-kv, "
                          f"{r['speedup_vs_legacy']}x vs legacy, "
                          f"{r['speedup_vs_recompute']}x vs recompute]")
+            if "speedup_vs_eager" in r:
+                extra = (f" [depth {r['async_depth']}: "
+                         f"{r['speedup_vs_eager']}x vs eager packed, "
+                         f"{r['blocking_syncs_per_iter']} blocking sync/it, "
+                         f"blocked {r['blocked_sync_s']}s "
+                         f"host {r['host_s']}s, "
+                         f"{r['overshoot_tokens']} overshoot]")
             sweep = (f", kv sweep {r['attn_kv_sweep_frac']}x"
                      if r.get("attn_kv_sweep_frac") is not None else "")
             print(f"fig10/{r['case']},0.0,{r['tok_s_cpu']} tok/s CPU "

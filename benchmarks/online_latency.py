@@ -33,15 +33,20 @@ def run_rate(rate: float, n_requests: int = 24, seed: int = 0) -> dict:
     while len(done) < n_requests and time.perf_counter() - t0 < 120:
         now = time.perf_counter() - t0
         while i < n_requests and arrivals[i] <= now:
-            reqs[i].arrival = arrivals[i]
+            # absolute stamp: finished_at (commit time) is absolute
+            # perf_counter, so finished_at - arrival is a real latency
+            reqs[i].arrival = t0 + arrivals[i]
             eng.submit(reqs[i])
             i += 1
         plan = eng.scheduler.plan()
         if plan is None:
+            # oldest in-flight commit may unblock planning (§10)
+            done += eng.drain(max_retire=1)
             if i < n_requests:
                 time.sleep(min(arrivals[i] - now, 0.01))
             continue
         done += eng.step(plan)
+    done += eng.drain()
     norm = [((r.finished_at or 0) - r.arrival) / max(len(r.output), 1)
             for r in done]
     st = eng.stats

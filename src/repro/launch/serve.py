@@ -40,6 +40,11 @@ def main() -> None:
     ap.add_argument("--step-mode", default="packed",
                     choices=["packed", "legacy"],
                     help="packed = one fused dispatch/iteration (DESIGN.md §8)")
+    ap.add_argument("--async-depth", type=int, default=None,
+                    help="iterations kept in flight before syncing their "
+                         "sampled tokens (DESIGN.md §10); 0 = eager "
+                         "lock-step (bit-identical to pre-§10 behaviour); "
+                         "default: 1 for the packed step, 0 for legacy")
     ap.add_argument("--no-kv-bucketing", action="store_true",
                     help="sweep max_len every iteration instead of the "
                          "KV-length bucket (DESIGN.md §9; A/B baseline)")
@@ -62,7 +67,7 @@ def main() -> None:
         cfg = scale_down(cfg)
     params = model_lib.init(cfg, jax.random.PRNGKey(args.seed))
     eng = ServeEngine(cfg, params, max_slots=args.slots, max_len=args.max_len,
-                      step_mode=args.step_mode,
+                      step_mode=args.step_mode, async_depth=args.async_depth,
                       kv_bucketing=not args.no_kv_bucketing,
                       attn_fast=args.attn_fast, attn_stream=args.attn_stream)
     reqs = make_requests(args.requests, cfg.vocab_size, args.seed)
@@ -78,16 +83,28 @@ def main() -> None:
         while time.perf_counter() - t0 < args.duration or eng.scheduler.n_active:
             now = time.perf_counter() - t0
             while i < len(reqs) and arrivals[i] <= now:
-                reqs[i].arrival = arrivals[i]
+                # absolute stamp: finished_at (commit time) is absolute
+                # perf_counter, so latency = finished_at - arrival works
+                reqs[i].arrival = t0 + arrivals[i]
                 eng.submit(reqs[i])
                 i += 1
             plan = eng.scheduler.plan()
             if plan is None:
-                if i >= len(reqs):
+                # the oldest in-flight commit may unblock planning (§10) —
+                # retire one, not the whole pipeline, and re-plan right away
+                # if it made progress
+                if eng.in_flight:
+                    done += eng.drain(max_retire=1)
+                    continue
+                if i >= len(reqs) and not eng.scheduler.n_active:
                     break
                 time.sleep(0.005)
                 continue
             done += eng.step(plan)
+        done += eng.drain()
+        # run() accumulates wall_time internally; the external plan/step
+        # loop must account it itself or throughput/wall prints read 0
+        eng.stats.wall_time += time.perf_counter() - t0
 
     st = eng.stats
     print(f"finished {len(done)}/{len(reqs)} requests in {st.iterations} iters")
@@ -97,6 +114,14 @@ def main() -> None:
     print(f"step={eng.step_mode}: {st.dispatches_per_iter:.2f} dispatches/iter, "
           f"{st.syncs_per_iter:.2f} host syncs/iter, "
           f"{st.packed_pad_tokens} pad tokens")
+    print(f"async depth {eng.async_depth}: "
+          f"{st.blocking_syncs}/{st.host_syncs} blocking syncs "
+          f"({st.blocking_syncs_per_iter:.2f}/iter), "
+          f"blocked {st.blocked_sync_time*1e3:.0f} ms, "
+          f"host {st.host_time*1e3:.0f} ms, "
+          f"dispatch {st.dispatch_time*1e3:.0f} ms "
+          f"(wall {st.wall_time*1e3:.0f} ms), "
+          f"{eng.scheduler.dropped_tokens} overshoot tokens dropped")
     print(f"dense batch histogram: {dict(sorted(st.dense_batch_hist.items()))}")
     if st.kv_bucket_hist:
         swept = sum(b * n for b, n in st.kv_bucket_hist.items())

@@ -363,7 +363,12 @@ def forward_packed(cfg: ModelConfig, params: dict, tokens: jax.Array,
     token_wpos: (T,) cache write position — ``token_pos`` for real tokens,
     ``max_len`` (out of bounds → scatter-dropped) for padding; token_active:
     (T,) False for padding tokens, which then neither write K/V nor commit
-    recurrent state.
+    recurrent state.  Under the engine's async pipeline (DESIGN.md §10) the
+    stream's decode positions arrive as *device-substituted* values: the
+    host writes placeholders and ``sampling.substitute_last`` gathers the
+    real tokens from the device-resident ``last_token`` buffer before this
+    function runs — the semantics here are unchanged, the values just never
+    round-tripped through the host.
 
     Attention writes each token's K/V (MLA latents) at ``(slot, pos)`` and
     applies a segment-aware mask — a token attends rows ``[0, pos]`` of its

@@ -26,6 +26,21 @@ the stream follows the nano-batch interleave
 (``core/nanobatch.packed_segment_order``), so the interleave governs the
 real token layout of the launched program, not just the cost model.
 
+**Asynchronous iteration pipeline (``async_depth``, DESIGN.md §10).**  The
+packed step's one sync per iteration is *deferrable*: the program samples
+on device and scatters each slot's token into a device-resident
+``last_token`` buffer, and the next iteration's decode inputs are gathered
+from that buffer *in-program* — so iteration i+1's entire input stream is
+computable from scheduler state alone, before iteration i's results ever
+reach the host.  With ``async_depth=k`` the engine keeps up to ``k``
+iterations in flight (a ring of sampled-token handles), planning
+speculatively (``scheduler.mark_launched``) and reconciling on commit
+(lag-(1+k) EOS, late speculative tokens dropped).  The packed step
+defaults to ``async_depth=1``; ``async_depth=0`` retires each iteration
+immediately and is bit-identical to the pre-§10 lock-step engine (the
+A/B baseline).  ``EngineStats`` splits the wall clock into host work /
+dispatch / blocked-sync time so the overlap is measurable.
+
 **Legacy step (``step_mode="legacy"``, kept for A/B).**  Decode first over
 all slots, then one ``model.forward_chunk`` dispatch per prefill chunk,
 each gathering/scattering the chunk's slot sub-cache (DESIGN.md §7).  The
@@ -41,6 +56,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 from typing import Optional
 
 import jax
@@ -67,9 +83,21 @@ class EngineStats:
     #                                  strictly greater on the recompute path
     decode_tokens: int = 0
     wall_time: float = 0.0
-    prefill_time: float = 0.0
+    # host/device overlap split (DESIGN.md §10; replaces the old
+    # ``prefill_time``, which only the legacy step ever updated):
+    #   host_time        — scheduling, packing, metadata build, commit,
+    #                      finalize (pure host work)
+    #   dispatch_time    — time inside jitted calls (enqueue overhead on an
+    #                      async backend, ≈ device compute on a sync one)
+    #   blocked_sync_time— time spent *waiting* on device→host transfers
+    #   blocking_syncs   — retrievals whose result was not already ready,
+    #                      i.e. the syncs that actually stalled the host
+    host_time: float = 0.0
+    dispatch_time: float = 0.0
+    blocked_sync_time: float = 0.0
+    blocking_syncs: int = 0
     model_dispatches: int = 0        # hot-path model program launches
-    host_syncs: int = 0              # blocking device→host result transfers
+    host_syncs: int = 0              # device→host result transfers
     packed_pad_tokens: int = 0       # bucketing padding launched (packed step)
     dense_batch_hist: dict[int, int] = dataclasses.field(default_factory=dict)
     # iterations per launched KV-length bucket (DESIGN.md §9; packed step)
@@ -101,6 +129,29 @@ class EngineStats:
     def syncs_per_iter(self) -> float:
         return self.host_syncs / self.iterations if self.iterations else 0.0
 
+    @property
+    def blocking_syncs_per_iter(self) -> float:
+        """Steady-state pipeline health (§10): < 1 means some iterations'
+        results were already on host when the engine asked for them — the
+        host/device overlap absorbed the sync."""
+        return self.blocking_syncs / self.iterations if self.iterations \
+            else 0.0
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """One launched-but-unretired packed iteration (DESIGN.md §10): the
+    deferred device→host sync is the ``tokens`` handle."""
+    plan: BatchPlan
+    sample_at: list              # (rid, stream index) pairs
+    tokens: jax.Array            # sampled-token handle, not yet transferred
+
+
+def _to_token(v) -> int:
+    """Sampled array element -> token id (multi-codebook frontends keep
+    codebook 0 — the one rule, shared by every step path)."""
+    return int(v) if np.ndim(v) == 0 else int(v.flat[0])
+
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 8,
@@ -110,6 +161,8 @@ class ServeEngine:
                  discrete_sizes: tuple[int, ...] = (256, 128, 64, 32, 16, 8),
                  prefill_mode: str = "incremental",
                  step_mode: Optional[str] = None,
+                 async_depth: Optional[int] = None,
+                 async_harvest: bool = True,
                  nano: int = 2,
                  kv_buckets: Optional[tuple[int, ...]] = None,
                  kv_bucketing: bool = True,
@@ -124,12 +177,26 @@ class ServeEngine:
         assert step_mode in ("packed", "legacy"), step_mode
         assert not (step_mode == "packed" and prefill_mode == "recompute"), \
             "packed step runs incremental prefill only"
+        if async_depth is None:
+            # the pipeline is the default serving mode (§5.3 / DESIGN.md
+            # §10); the legacy step has no deferred-sync path
+            async_depth = 1 if step_mode == "packed" else 0
+        assert async_depth >= 0, async_depth
+        assert async_depth == 0 or step_mode == "packed", \
+            "the async pipeline (DESIGN.md §10) requires the packed step"
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
         self.max_len = max_len
         self.prefill_mode = prefill_mode
         self.step_mode = step_mode
+        # async pipeline (DESIGN.md §10): up to async_depth iterations stay
+        # in flight; async_harvest additionally retires any already-finished
+        # iteration without blocking, shrinking the speculation window
+        # (tests pin it False to exercise worst-case lag deterministically)
+        self.async_depth = int(async_depth)
+        self.async_harvest = bool(async_harvest)
+        self._ring: deque[_InFlight] = deque()
         self.nano = nano
         self.key = jax.random.PRNGKey(seed)
         # §Perf HC3 toggles, promoted from trace-time env reads (a retrace
@@ -167,6 +234,12 @@ class ServeEngine:
         # slot caches: model cache trees with leading batch = max_slots
         self.cache = model_lib.init_cache(cfg, 1, max_slots, max_len)
         self.cache_len = jnp.zeros((max_slots,), jnp.int32)
+        # device-resident sampled-token feedback (DESIGN.md §10): the packed
+        # program scatters each sample point's token here and gathers the
+        # next iteration's decode inputs from it, so the host never needs a
+        # result transfer to form the next input stream (multi-codebook
+        # frontends keep codebook 0, matching the host feedback path)
+        self.last_token = jnp.zeros((max_slots,), jnp.int32)
         self.slot_free = list(range(max_slots))
         self.stats = EngineStats()
         # host mirror of each slot's context length (packed step builds its
@@ -179,9 +252,11 @@ class ServeEngine:
 
         # one compiled program per (bucketed launch length T, kv bucket) —
         # the compile cache is bounded by |discrete dense sizes| × |kv
-        # buckets| (kv_bucket is static: it sets the swept cache extent)
-        self._packed_step = jax.jit(self._packed_impl, donate_argnums=(1,),
-                                    static_argnums=(9,))
+        # buckets| (kv_bucket is static: it sets the swept cache extent;
+        # the last_token buffer is a traced operand, NOT a trace axis)
+        self._packed_step = jax.jit(self._packed_impl,
+                                    donate_argnums=(1, 9),
+                                    static_argnums=(12,))
         self._decode_step = jax.jit(self._decode_impl, donate_argnums=(1,))
         # one compiled program per bucketed chunk length (scheduler-quantized)
         self._prefill_step = jax.jit(self._prefill_impl, donate_argnums=(1,))
@@ -234,24 +309,33 @@ class ServeEngine:
 
     # ---- jitted token-packed step (one dispatch per iteration) --------------
     def _packed_impl(self, params, cache, tokens, token_slot, token_pos,
-                     token_wpos, token_active, cache_len, reset, kv_bucket):
+                     token_wpos, token_active, cache_len, reset, last_token,
+                     from_last, sample_slot, kv_bucket):
         """The whole iteration as one program (DESIGN.md §8): reset reused
-        slots' recurrent state, run the packed multi-segment forward, sample
-        greedily on-device, and advance ``cache_len`` from the per-token
-        metadata — so the only device→host transfer is the sampled tokens.
-        ``kv_bucket`` is static (DESIGN.md §9): attention sweeps only that
-        many cache rows per slot, so the program's attention cost tracks the
-        iteration's actual context, not ``max_len``."""
+        slots' recurrent state, substitute the stream's decode placeholders
+        with the device-resident ``last_token`` buffer (§10 — the previous
+        iteration's samples never round-trip through the host), run the
+        packed multi-segment forward, sample greedily on-device, scatter
+        the samples back into ``last_token`` at the stream's sample points,
+        and advance ``cache_len`` from the per-token metadata — so the only
+        device→host transfer is the sampled tokens, and even that one is
+        deferrable (``async_depth``).  ``kv_bucket`` is static (DESIGN.md
+        §9): attention sweeps only that many cache rows per slot, so the
+        program's attention cost tracks the iteration's actual context, not
+        ``max_len``."""
         cache = self._reset_recurrent(cache, reset)
+        toks = sampling.substitute_last(tokens, last_token, token_slot,
+                                        from_last)
         with ops.attn_config(fast=self.attn_fast, stream=self.attn_stream):
             logits, new_cache = model_lib.forward_packed(
-                self.cfg, params, tokens, cache, token_slot, token_pos,
+                self.cfg, params, toks, cache, token_slot, token_pos,
                 token_wpos, token_active, kv_bucket=kv_bucket)
         next_tok = sampling.greedy(logits[0])
+        new_last = sampling.scatter_last(last_token, sample_slot, next_tok)
         new_len = jnp.where(reset, 0, cache_len)
         new_len = new_len.at[token_slot].max(
             jnp.where(token_active, token_pos + 1, 0))
-        return next_tok, new_cache, new_len
+        return next_tok, new_cache, new_len, new_last
 
     def _reset_recurrent(self, cache, reset):
         """Select fresh recurrent state for slots in ``reset`` (reused slots
@@ -279,33 +363,101 @@ class ServeEngine:
     def submit(self, req: Request) -> None:
         self.scheduler.submit(req)
 
+    @property
+    def in_flight(self) -> int:
+        """Launched-but-unretired iterations (§10); 0 once drained."""
+        return len(self._ring)
+
     def run(self, max_iters: int = 10_000) -> list[Request]:
         done: list[Request] = []
         t0 = time.perf_counter()
         for _ in range(max_iters):
+            tp = time.perf_counter()
             plan = self.scheduler.plan()
+            self.stats.host_time += time.perf_counter() - tp
             if plan is None:
+                if self._ring:
+                    # nothing plannable until in-flight results land (e.g.
+                    # every request sits in its post-EOS window): retire the
+                    # oldest iteration and re-plan with its commits applied
+                    done += self._retire_oldest()
+                    continue
                 break
             done += self.step(plan)
+        done += self.drain()
         self.stats.wall_time += time.perf_counter() - t0
         return done
 
+    def drain(self, max_retire: Optional[int] = None) -> list[Request]:
+        """Retire in-flight iterations, oldest first (§10).  With no bound
+        this is the exit barrier — ``run()`` drains before returning, and
+        external plan/step drivers (online serving loops) must drain after
+        their arrival loop so no sampled tokens are left on device.
+        ``max_retire=1`` is the mid-loop idle step: retire just the oldest
+        iteration (its commits may unblock planning) without flushing the
+        whole pipeline and re-serializing host and device."""
+        done: list[Request] = []
+        retired = 0
+        while self._ring and (max_retire is None or retired < max_retire):
+            done += self._retire_oldest()
+            retired += 1
+        return done
+
     def step(self, plan: BatchPlan) -> list[Request]:
-        now = time.perf_counter()
         self.stats.iterations += 1
         self.stats.dense_batch_hist[plan.dense_batch] = \
             self.stats.dense_batch_hist.get(plan.dense_batch, 0) + 1
-        if self.step_mode == "packed":
-            sampled = self._step_packed(plan)
-        else:
+        if self.step_mode != "packed":
+            self.scheduler.mark_launched(plan)
             sampled = self._step_legacy(plan)
-        finished = self.scheduler.commit(plan, sampled, now)
-        for r in finished:
-            self._finalize(r)
+            now = time.perf_counter()
+            finished = self.scheduler.commit(plan, sampled, now)
+            for r in finished:
+                self._finalize(r)
+            self.stats.host_time += time.perf_counter() - now
+            return finished
+        # packed path: launch now, sync up to async_depth iterations later
+        self._ring.append(self._launch_packed(plan))
+        finished: list[Request] = []
+        if self.async_harvest:
+            # free retirement: anything whose result already landed commits
+            # now, keeping the speculation window as small as possible
+            while self._ring and self._ring[0].tokens.is_ready():
+                finished += self._retire_oldest()
+        while len(self._ring) > self.async_depth:
+            finished += self._retire_oldest()
         return finished
 
-    # ---- packed iteration: one dispatch, one host sync ----------------------
-    def _step_packed(self, plan: BatchPlan) -> dict[int, int]:
+    # ---- packed iteration: one dispatch, one (deferred) host sync -----------
+    def _retire_oldest(self) -> list[Request]:
+        """Transfer the oldest in-flight iteration's sampled tokens (the
+        deferred sync — blocking only if the device hasn't caught up),
+        commit them to the scheduler, and finalize whatever finished."""
+        inf = self._ring.popleft()
+        nt = self._fetch(inf.tokens)
+        t1 = time.perf_counter()
+        sampled = {rid: _to_token(nt[idx]) for rid, idx in inf.sample_at}
+        finished = self.scheduler.commit(inf.plan, sampled, t1)
+        for r in finished:
+            self._finalize(r)
+        self.stats.host_time += time.perf_counter() - t1
+        return finished
+
+    def _fetch(self, handle: jax.Array) -> np.ndarray:
+        """Device→host retrieval with overlap accounting: counts the sync,
+        the time spent waiting, and whether it actually blocked (the result
+        was not yet ready — §10's pipeline-health signal)."""
+        t0 = time.perf_counter()
+        ready = handle.is_ready()
+        out = np.asarray(handle)
+        self.stats.blocked_sync_time += time.perf_counter() - t0
+        self.stats.host_syncs += 1
+        if not ready:
+            self.stats.blocking_syncs += 1
+        return out
+
+    def _launch_packed(self, plan: BatchPlan) -> _InFlight:
+        t_host = time.perf_counter()
         packed = self.scheduler.pack(plan, nano=self.nano)
         reset = np.zeros((self.max_slots,), bool)
         for seg in packed.segments:
@@ -321,12 +473,15 @@ class ServeEngine:
         slot = np.zeros((t_total,), np.int32)
         pos = np.zeros((t_total,), np.int32)
         active = np.zeros((t_total,), bool)
+        # decode positions take last_token[slot] on device (§10): the host
+        # writes a placeholder and never needs the sampled value
+        from_last = np.zeros((t_total,), bool)
         sample_at: list[tuple[int, int]] = []      # (rid, stream index)
         t = 0
         for seg in packed.segments:
             r = seg.req
             if seg.is_decode:
-                tokens[t] = r.output[-1] if r.output else r.prompt[-1]
+                from_last[t] = True
                 slot[t] = r.slot
                 pos[t] = self._pos[r.slot]
                 active[t] = True
@@ -344,6 +499,11 @@ class ServeEngine:
         assert t == packed.tokens, (t, packed.tokens)
         # padding tokens write out of bounds -> the scatter drops them
         wpos = np.where(active, pos, self.max_len).astype(np.int32)
+        # sample points scatter into last_token[slot]; non-sample positions
+        # write out of bounds -> dropped
+        sample_slot = np.full((t_total,), self.max_slots, np.int32)
+        for _rid, idx in sample_at:
+            sample_slot[idx] = slot[idx]
 
         # iteration's KV-length bucket (DESIGN.md §9): every attended row
         # must sit below it — the scheduler quantized the max extent up
@@ -359,18 +519,9 @@ class ServeEngine:
         if self.cfg.frontend == "audio":
             tok_in = jnp.repeat(tok_in[..., None], self.cfg.num_codebooks,
                                 axis=-1)
-        next_tok, self.cache, self.cache_len = self._packed_step(
-            self.params, self.cache, tok_in, jnp.asarray(slot),
-            jnp.asarray(pos), jnp.asarray(wpos), jnp.asarray(active),
-            self.cache_len, jnp.asarray(reset), kv_bucket)
-        self.stats.model_dispatches += 1
-        nt = np.asarray(next_tok)          # the iteration's one D2H transfer
-        self.stats.host_syncs += 1
-
-        sampled: dict[int, int] = {}
-        for rid, idx in sample_at:
-            v = nt[idx]
-            sampled[rid] = int(v) if np.ndim(v) == 0 else int(v.flat[0])
+        # launch-side bookkeeping BEFORE dispatch: the scheduler's next plan
+        # may be formed while this iteration is still on device (§10)
+        self.scheduler.mark_launched(plan)
         n_decode = 0
         for seg in packed.segments:
             if seg.is_decode:
@@ -382,7 +533,17 @@ class ServeEngine:
         self.stats.prefill_tokens += packed.tokens - n_decode
         self.stats.prefill_model_tokens += packed.tokens - n_decode
         self.stats.packed_pad_tokens += packed.padding
-        return sampled
+        t_disp = time.perf_counter()
+        self.stats.host_time += t_disp - t_host
+        next_tok, self.cache, self.cache_len, self.last_token = \
+            self._packed_step(
+                self.params, self.cache, tok_in, jnp.asarray(slot),
+                jnp.asarray(pos), jnp.asarray(wpos), jnp.asarray(active),
+                self.cache_len, jnp.asarray(reset), self.last_token,
+                jnp.asarray(from_last), jnp.asarray(sample_slot), kv_bucket)
+        self.stats.dispatch_time += time.perf_counter() - t_disp
+        self.stats.model_dispatches += 1
+        return _InFlight(plan=plan, sample_at=sample_at, tokens=next_tok)
 
     # ---- legacy iteration: decode dispatch + one dispatch per chunk ---------
     def _step_legacy(self, plan: BatchPlan) -> dict[int, int]:
@@ -400,21 +561,20 @@ class ServeEngine:
             if self.cfg.frontend == "audio":
                 tok_in = jnp.repeat(tok_in[..., None], self.cfg.num_codebooks,
                                     axis=-1)
+            t_disp = time.perf_counter()
             next_tok, self.cache = self._decode_step(
                 self.params, self.cache, tok_in, self.cache_len,
                 jnp.asarray(active))
+            self.stats.dispatch_time += time.perf_counter() - t_disp
             self.stats.model_dispatches += 1
             self.cache_len = self.cache_len + jnp.asarray(active, jnp.int32)
-            nt = np.asarray(next_tok)
-            self.stats.host_syncs += 1
+            nt = self._fetch(next_tok)
             for r in decode_reqs:
-                t = nt[r.slot]
-                sampled[r.rid] = int(t) if np.ndim(t) == 0 else int(t.flat[0])
+                sampled[r.rid] = _to_token(nt[r.slot])
                 self._pos[r.slot] += 1
             self.stats.decode_tokens += len(decode_reqs)
 
         # ---- chunked prefill -------------------------------------------------
-        t_prefill = time.perf_counter()
         for chunk in plan.prefill:
             r = chunk.req
             if r.slot < 0:
@@ -435,7 +595,6 @@ class ServeEngine:
             self._pos[r.slot] = chunk.offset + chunk.length
             if chunk.offset + chunk.length == r.prompt_len:
                 sampled[r.rid] = last_tok
-        self.stats.prefill_time += time.perf_counter() - t_prefill
         return sampled
 
     # ---- internals -----------------------------------------------------------
@@ -447,14 +606,14 @@ class ServeEngine:
         if self.cfg.frontend == "audio":
             tok_in = jnp.repeat(tok_in[..., None], self.cfg.num_codebooks,
                                 axis=-1)
+        t_disp = time.perf_counter()
         next_tok, self.cache = self._prefill_step(
             self.params, self.cache, tok_in, jnp.int32(r.slot),
             jnp.int32(offset))
+        self.stats.dispatch_time += time.perf_counter() - t_disp
         self.stats.model_dispatches += 1
         self.cache_len = self.cache_len.at[r.slot].set(offset + length)
-        t = np.asarray(next_tok)
-        self.stats.host_syncs += 1
-        return int(t) if t.ndim == 0 else int(t.flat[0])
+        return _to_token(self._fetch(next_tok))
 
     def _prefill_to(self, r: Request, upto: int) -> int:
         """Recompute path (``prefill_mode="recompute"``; pre-DESIGN.md-§7
@@ -467,15 +626,16 @@ class ServeEngine:
         tok_in = jnp.asarray(toks)
         if cfg.frontend == "audio":
             tok_in = jnp.repeat(tok_in[..., None], cfg.num_codebooks, axis=-1)
+        t_disp = time.perf_counter()
         with ops.attn_config(fast=self.attn_fast, stream=self.attn_stream):
             logits, _aux, states = model_lib.forward_full(
                 cfg, self.params, tok_in, return_states=True)
+        self.stats.dispatch_time += time.perf_counter() - t_disp
         self.stats.model_dispatches += 1
         self._scatter_states(r.slot, states)
         self.cache_len = self.cache_len.at[r.slot].set(upto)
-        last = np.asarray(logits[0, -1])
-        self.stats.host_syncs += 1
-        return int(last.argmax(-1)) if last.ndim == 1 else int(last.argmax(-1).flat[0])
+        last = self._fetch(logits[0, -1])
+        return _to_token(last.argmax(-1))
 
     def _scatter_states(self, slot: int, states) -> None:
         """Write per-layer mixer states into a slot (recompute path: the
@@ -506,12 +666,15 @@ class ServeEngine:
             self.cache_len = self.cache_len.at[r.slot].set(0)
             self._pos[r.slot] = 0
             r.slot = -1
-        # strip the one post-EOS token (async EOS, §5.3)
+        # strip the post-EOS overshoot (async EOS, §5.3; under the §10
+        # pipeline, later speculative tokens were already dropped at commit)
         if r.pending_eos and r.eos_id is not None and r.eos_id in r.output:
             r.output = r.output[: r.output.index(r.eos_id) + 1]
-        # offload KV for multi-round reuse (byte-accurate accounting)
-        kv_elems = max(r.total_tokens * self.kv.bytes_per_token // 4, 1)
-        self.kv.offload(r.rid, np.zeros((kv_elems,), np.float32))
+        # offload KV for multi-round reuse — size-only accounting: no
+        # per-finished-request garbage blob is materialized (kvcache.py)
+        self.kv.offload(r.rid,
+                        nbytes=max(r.total_tokens * self.kv.bytes_per_token,
+                                   1))
 
 
 def _reset_slot(cache, init, slot):

@@ -127,22 +127,48 @@ class PagedKVManager:
         self.stats.device_pages_used = self.pages_used
 
     # ---- offload / upload (§5.4) -------------------------------------------
-    def offload(self, rid: int, kv_data: np.ndarray) -> None:
+    @staticmethod
+    def _entry_bytes(payload) -> int:
+        """Host-pool payload size: real blobs carry their bytes, size-only
+        entries carry just the byte count."""
+        return payload if isinstance(payload, int) else len(payload)
+
+    def offload(self, rid: int, kv_data: Optional[np.ndarray] = None, *,
+                nbytes: Optional[int] = None) -> None:
         """Aggregate the request's scattered pages into one contiguous buffer
-        (page-aggregation kernel) and move it to the host pool (LRU)."""
+        (page-aggregation kernel) and move it to the host pool (LRU).
+
+        ``kv_data`` is the real KV buffer; ``nbytes`` instead records a
+        *size-only* entry — full byte/copy/LRU accounting with no host copy
+        materialized.  The engine's per-finished-request path uses this (it
+        used to allocate a garbage ``np.zeros`` proportional to the
+        request's KV purely to feed the byte counter)."""
+        assert (kv_data is None) != (nbytes is None), \
+            "offload takes exactly one of kv_data / nbytes"
         tokens = self.lengths.get(rid, 0)
         if tokens == 0:
             return
-        contiguous = np.ascontiguousarray(kv_data)       # the aggregation
-        blob = contiguous.tobytes()
+        if kv_data is not None:
+            contiguous = np.ascontiguousarray(kv_data)   # the aggregation
+            payload = contiguous.tobytes()
+        else:
+            payload = int(nbytes)            # size-only: bytes never copied
+        size = self._entry_bytes(payload)
         self.stats.aggregated_copies += 1
-        self.stats.offload_bytes += len(blob)
-        self.host_pool[rid] = (tokens, blob)
+        self.stats.offload_bytes += size
+        # re-offload of a rid still pooled (multi-round turnarounds, and the
+        # steady state for size-only entries, which upload() never pops)
+        # replaces its entry — release the old bytes or host_bytes drifts
+        # past capacity and the LRU loop evicts the whole pool
+        prev = self.host_pool.get(rid)
+        if prev is not None:
+            self.stats.host_bytes -= self._entry_bytes(prev[1])
+        self.host_pool[rid] = (tokens, payload)
         self.host_pool.move_to_end(rid)
-        self.stats.host_bytes += len(blob)
+        self.stats.host_bytes += size
         while self.stats.host_bytes > self.host_capacity and self.host_pool:
             _, (_, evicted) = self.host_pool.popitem(last=False)   # LRU
-            self.stats.host_bytes -= len(evicted)
+            self.stats.host_bytes -= self._entry_bytes(evicted)
             # the evicted request's KV is gone for good — a future upload()
             # will miss and the conversation re-prefills from scratch
             self.stats.discarded_requests += 1
@@ -155,11 +181,15 @@ class PagedKVManager:
         Device re-allocation can fail under pressure; the blob must then
         *stay* in the host pool so the caller can retry later (it used to be
         popped first and silently lost — the request's KV discarded without
-        even counting it)."""
+        even counting it).  Size-only entries (``offload(nbytes=...)``)
+        carry no data, so they restore nothing: a miss, without touching
+        device pages or the pool entry."""
         entry = self.host_pool.get(rid)
         if entry is None:
             return None
         tokens, blob = entry
+        if isinstance(blob, int):
+            return None                     # size-only entry: no data
         if not self.allocate(rid, tokens):
             return None                     # kept on host; retryable
         self.host_pool.pop(rid)

@@ -31,6 +31,15 @@ class Request:
     finished_at: Optional[float] = None
     # async EOS (paper §5.3): EOS seen at iter i is acted on at iter i+1
     pending_eos: bool = False
+    # ---- speculative launch state (async pipeline, DESIGN.md §10) ----------
+    # prompt tokens *launched* into the model; runs ahead of ``prefill_done``
+    # (which tracks committed results) by the in-flight iterations
+    prefill_launched: int = 0
+    # sampled tokens launched but not yet committed: in-flight decode tokens
+    # plus the prefill-final token.  Planning bounds generation with
+    # ``len(output) + inflight`` so speculation never launches past
+    # ``max_new_tokens``, and caps post-EOS overshoot at one in-flight token
+    inflight: int = 0
 
     @property
     def prompt_len(self) -> int:
@@ -43,6 +52,13 @@ class Request:
     @property
     def prefill_remaining(self) -> int:
         return self.prompt_len - self.prefill_done
+
+    @property
+    def prefill_unlaunched(self) -> int:
+        """Prompt tokens not yet launched — what the *next* plan can chunk
+        (``prefill_remaining`` counts committed progress and lags this by
+        the in-flight iterations when the engine pipelines, §10)."""
+        return self.prompt_len - self.prefill_launched
 
     @property
     def total_tokens(self) -> int:

@@ -103,6 +103,8 @@ class Router:
         for r in orphans:
             r.state = State.WAITING
             r.prefill_done = 0
+            r.prefill_launched = 0
+            r.inflight = 0
             r.output = []
             r.slot = -1
             self.submit(r)

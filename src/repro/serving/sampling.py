@@ -23,3 +23,36 @@ def top_k(logits: jax.Array, key: jax.Array, k: int = 50,
     choice = jax.random.categorical(key, vals.astype(jnp.float32) / max(temp, 1e-6),
                                     axis=-1)
     return jnp.take_along_axis(idx, choice[..., None], axis=-1)[..., 0].astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# device-resident sampled-token feedback (async pipeline, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+def substitute_last(tokens: jax.Array, last_token: jax.Array,
+                    token_slot: jax.Array, from_last: jax.Array) -> jax.Array:
+    """Replace the packed stream's decode placeholders with the on-device
+    ``last_token`` buffer, so the host never needs the previous iteration's
+    sampled values to build an input stream.
+
+    tokens: (1, T[, K]) host-built stream (decode positions hold
+    placeholders); last_token: (n_slots,) per-slot feedback buffer;
+    token_slot: (T,); from_last: (T,) bool — True at decode positions.
+    Multi-codebook streams broadcast the feedback token across codebooks,
+    matching the host path's ``repeat`` of the codebook-0 sample."""
+    fed = last_token[token_slot]                         # (T,)
+    fed = fed.reshape(fed.shape + (1,) * (tokens.ndim - 2))
+    mask = from_last.reshape(from_last.shape + (1,) * (tokens.ndim - 2))
+    return jnp.where(mask, fed.astype(tokens.dtype), tokens[0])[None]
+
+
+def scatter_last(last_token: jax.Array, sample_slot: jax.Array,
+                 sampled: jax.Array) -> jax.Array:
+    """Scatter this iteration's samples into the feedback buffer at the
+    stream's sample points (each decode token and each prefill-final
+    token).  ``sample_slot`` is the token's slot at sample points and
+    ``n_slots`` (out of bounds → dropped) elsewhere.  Multi-codebook
+    samples keep codebook 0, matching the host feedback path."""
+    if sampled.ndim == 2:
+        sampled = sampled[:, 0]
+    return last_token.at[sample_slot].set(
+        sampled.astype(last_token.dtype), mode="drop")

@@ -1,5 +1,6 @@
 """Global batch scheduler (paper §4.2): continuous batching + chunked
-prefill + discrete batching, with asynchronous EOS handling (§5.3).
+prefill + discrete batching, with asynchronous control-flow scheduling
+(§5.3 / DESIGN.md §10).
 
 Every iteration the scheduler emits a ``BatchPlan``:
   * all active decode requests contribute one token each;
@@ -7,6 +8,18 @@ Every iteration the scheduler emits a ``BatchPlan``:
     batch up to the chosen *discrete* size (paper: GEMM efficiency cliffs —
     launch 2048, never 2049);
   * new requests are admitted eagerly while the KV peak-memory estimate fits.
+
+Plans are formed **speculatively** from launch-side state
+(``prefill_launched`` / ``inflight``), not committed results: every
+in-flight decode is assumed to continue, so the engine can form and launch
+iteration i+1 before iteration i's sampled tokens ever reach the host (the
+§5.3 mechanism generalized from lag-1 EOS to a lag-(1+depth) pipeline).
+``commit`` reconciles late — it applies sampled tokens as they arrive,
+flags EOS (acted on at the next planning opportunity, paper's <1%
+overhead), finishes requests, and *drops* speculative tokens that raced
+past a finish (``dropped_tokens``).  With an eager engine
+(``async_depth=0``) launch state never leads committed state and the
+schedule is bit-identical to the pre-§10 lock-step one.
 """
 from __future__ import annotations
 
@@ -107,6 +120,9 @@ class GlobalBatchScheduler:
         # padding accounting for the packed step (tokens launched but unused)
         self.padding_tokens = 0
         self.launched_tokens = 0
+        # speculative decode tokens launched for requests that finished
+        # before their commit arrived (async pipeline overshoot, §10)
+        self.dropped_tokens = 0
 
     # ---- admission ---------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -147,12 +163,30 @@ class GlobalBatchScheduler:
         return want
 
     # ---- per-iteration plan --------------------------------------------------
+    def _decodable(self, r: Request) -> bool:
+        """Speculative decode eligibility (§10): plan from *launched* state.
+
+        A request decodes once its whole prompt has been launched (the
+        first decode token is the prefill-final sample, which may still be
+        in flight — the engine's device-resident ``last_token`` buffer
+        feeds it forward without a host round-trip).  Generation is capped
+        by launched samples (``len(output) + inflight``), so speculation
+        never runs past ``max_new_tokens``; once an EOS has been *committed*
+        (``pending_eos``) the request stops planning as soon as one
+        post-EOS token is in flight — the §5.3 single extra token,
+        regardless of pipeline depth."""
+        return (r.state != State.FINISHED
+                and r.prefill_launched >= r.prompt_len
+                and len(r.output) + r.inflight < r.max_new_tokens
+                and not (r.pending_eos and r.inflight > 0))
+
     def plan(self) -> Optional[BatchPlan]:
         self._admit()
-        decode = [r for r in self.active if r.state == State.DECODE]
-        prefilling = [r for r in self.active if r.state == State.PREFILL]
+        decode = [r for r in self.active if self._decodable(r)]
+        prefilling = [r for r in self.active if r.prefill_unlaunched > 0]
 
-        available = len(decode) + sum(r.prefill_remaining for r in prefilling)
+        available = len(decode) + sum(r.prefill_unlaunched
+                                      for r in prefilling)
         if available == 0:
             return None
         dense = self._pick_dense(available)
@@ -160,12 +194,25 @@ class GlobalBatchScheduler:
         budget = max(dense - len(decode), 0)
         chunks: list[PrefillChunk] = []
         for r in prefilling:
-            if budget < min(self.chunk_min, r.prefill_remaining):
+            if budget < min(self.chunk_min, r.prefill_unlaunched):
                 break
-            take = self._quantize_chunk(min(budget, r.prefill_remaining))
-            chunks.append(PrefillChunk(req=r, offset=r.prefill_done, length=take))
+            take = self._quantize_chunk(min(budget, r.prefill_unlaunched))
+            chunks.append(PrefillChunk(req=r, offset=r.prefill_launched,
+                                       length=take))
             budget -= take
         return BatchPlan(decode=decode, prefill=chunks, dense_batch=dense)
+
+    def mark_launched(self, plan: BatchPlan) -> None:
+        """Advance launch-side state when the engine dispatches ``plan``
+        (after ``pack()`` — packing reads the pre-launch in-flight counts).
+        Each decode token and each prefill-*final* chunk puts one sampled
+        token in flight; ``commit`` retires them as results arrive."""
+        for r in plan.decode:
+            r.inflight += 1
+        for c in plan.prefill:
+            c.req.prefill_launched += c.length
+            if c.req.prefill_launched >= c.req.prompt_len:
+                c.req.inflight += 1
 
     # ---- packed launch layout (single-dispatch step, DESIGN.md §8) ----------
     def bucket_tokens(self, tokens: int) -> int:
@@ -197,13 +244,16 @@ class GlobalBatchScheduler:
 
     def _kv_needed(self, segs: list[PackedSegment]) -> int:
         """Exact max KV extent this iteration's attention touches: a decode
-        segment writes at position ``total_tokens - 1`` (prompt + sampled
-        outputs so far) and attends ``total_tokens`` rows; a prefill chunk
-        attends ``offset + length`` rows."""
+        segment writes at position ``total_tokens + inflight - 1`` (prompt
+        + committed outputs + launched-but-uncommitted samples, which all
+        occupy cache rows below it) and attends one more row than that; a
+        prefill chunk attends ``offset + length`` rows.  With an eager
+        engine ``inflight`` is zero at pack time and this reduces to the
+        pre-§10 ``total_tokens``."""
         needed = 1
         for s in segs:
-            needed = max(needed, s.req.total_tokens if s.is_decode
-                         else s.offset + s.length)
+            needed = max(needed, s.req.total_tokens + s.req.inflight
+                         if s.is_decode else s.offset + s.length)
         return needed
 
     def pack(self, plan: BatchPlan, *, nano: int = 2) -> PackedPlan:
@@ -241,11 +291,24 @@ class GlobalBatchScheduler:
         """Apply iteration results.  ``sampled``: rid -> next token id.
 
         EOS is *not* acted on this iteration (async top-level scheduling,
-        §5.3): the request is flagged and removed when the *next* plan is
-        formed, generating one extra token — paper's <1% overhead."""
+        §5.3): the request is flagged and removed at the next planning
+        opportunity, generating one extra token — paper's <1% overhead.
+        Under a pipelined engine (§10) commits arrive up to ``async_depth``
+        iterations after their plan was formed; tokens sampled for a
+        request that has since FINISHED (its later iterations were launched
+        before the EOS-bearing commit landed) are *dropped* here — the
+        request was already finalized and returned, so a late append would
+        mutate a result the caller holds."""
         finished = []
         for c in plan.prefill:
             c.req.prefill_done += c.length
+            # lock-step drivers call plan()/commit() without the engine's
+            # mark_launched(): keep launch state from falling *behind*
+            # committed state, so the next plan's chunks still advance
+            # (under a pipelined engine launched already leads done and
+            # this is a no-op)
+            c.req.prefill_launched = max(c.req.prefill_launched,
+                                         c.req.prefill_done)
             self.kv.extend(c.req.rid, max(c.req.total_tokens, 1))
             if c.req.prefill_remaining == 0:
                 c.req.state = State.DECODE
@@ -253,6 +316,10 @@ class GlobalBatchScheduler:
                                       if c.req.state == State.DECODE]:
             tok = sampled.get(r.rid)
             if tok is None:
+                continue
+            r.inflight = max(r.inflight - 1, 0)
+            if r.state in (State.FINISHED, State.DISCARDED):
+                self.dropped_tokens += 1   # late speculative token (§10)
                 continue
             if r.first_token_at is None:
                 r.first_token_at = now

@@ -1,0 +1,339 @@
+"""Asynchronous iteration pipeline (DESIGN.md §10).
+
+Covers the tentpole invariants:
+  * ``async_depth=0`` is behavior-identical to the eager engine (same
+    outputs, same dispatch/sync counts, nothing dropped);
+  * ``async_depth>=1`` produces the same f32 outputs after EOS-strip as the
+    eager engine across every mixer family (the device-resident
+    ``last_token`` feedback + speculative planning change *when* results
+    cross to the host, never *what* is computed);
+  * lag-k EOS reconciliation: with harvesting disabled (worst-case lag) a
+    depth-k engine launches up to k extra speculative tokens past EOS,
+    commits drop the late ones (``scheduler.dropped_tokens``), and the
+    finalized output still strips to EOS;
+  * speculation never launches past ``max_new_tokens`` (launch-side cap);
+  * the ``last_token`` buffer adds no trace axis — the packed-step compile
+    cache stays ≤ (|T buckets| + 1) × |kv buckets|;
+  * ``drain()`` retires everything (no sampled tokens left on device);
+  * the scheduler's defensive bucket branches (``bucket_tokens`` overflow,
+    ``bucket_kv`` saturation) and the size-only KV offload accounting
+    satellites.
+
+Engine A/Bs run in f32 (bf16 accumulation-order diffs flip MoE routing).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, scale_down
+from repro.models import model
+from repro.serving.engine import ServeEngine
+from repro.serving.kvcache import PagedKVManager
+from repro.serving.request import Request
+from repro.serving.scheduler import GlobalBatchScheduler
+
+FAMILIES = ["tiny-toy", "deepseek-v2-236b", "jamba-1.5-large-398b",
+            "xlstm-1.3b"]
+
+
+def _cfg(name):
+    cfg = get_config(name) if name == "tiny-toy" else scale_down(
+        get_config(name))
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, capacity_factor=16.0))
+    return dataclasses.replace(cfg, dtype="float32")
+
+
+@pytest.fixture(scope="module", params=FAMILIES)
+def family(request):
+    cfg = _cfg(request.param)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _probe_eos(cfg, params, prompt):
+    """A token the model actually emits (greedy continuation of ``prompt``)
+    — submitting ``prompt`` with this as ``eos_id`` guarantees an EOS hit."""
+    logits, _ = model.forward_full(cfg, params,
+                                   jnp.asarray(prompt, jnp.int32)[None])
+    return int(np.argmax(np.asarray(logits[0, -1])))
+
+
+def _run(cfg, params, prompts, eos_id, **kwargs):
+    eng = ServeEngine(cfg, params, max_slots=2, max_len=48,
+                      discrete_sizes=(16, 8), avg_decode_len=4, **kwargs)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=list(p), max_new_tokens=4,
+                           eos_id=eos_id))
+    done = eng.run()
+    assert len(done) == len(prompts)
+    assert not eng._ring                      # drained on exit
+    return eng, {r.rid: r.output for r in done}
+
+
+def test_async_matches_eager_with_eos_strip(family):
+    """Acceptance criterion: depth-1 pipelined outputs == eager outputs
+    after EOS-strip, across mixer families, through slot reuse and an EOS
+    hit mid-stream."""
+    cfg, params = family
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(0, cfg.vocab_size,
+                                 size=int(rng.integers(3, 12))))
+               for _ in range(5)]
+    eos = _probe_eos(cfg, params, prompts[0])
+    eager, out0 = _run(cfg, params, prompts, eos, async_depth=0)
+    asyn, out1 = _run(cfg, params, prompts, eos, async_depth=1)
+    assert out0 == out1, cfg.name
+    # rid 0 really exercised the EOS path (probe = its first greedy token)
+    assert out0[0][-1] == eos
+    # same per-iteration dispatch/sync discipline on both engines
+    assert asyn.stats.model_dispatches == asyn.stats.iterations
+    assert asyn.stats.host_syncs == asyn.stats.iterations
+
+
+def test_depth0_is_bit_identical_lockstep():
+    """async_depth=0 must behave exactly like the pre-§10 engine: one
+    blocking retirement per iteration, launch state never leads committed
+    state, nothing speculative, nothing dropped."""
+    cfg = _cfg("tiny-toy")
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    prompts = [list(rng.integers(0, cfg.vocab_size, size=9))
+               for _ in range(4)]
+    eng, _ = _run(cfg, params, prompts, eos_id=None, async_depth=0)
+    assert eng.async_depth == 0
+    assert eng.stats.model_dispatches == eng.stats.iterations
+    assert eng.stats.host_syncs == eng.stats.iterations
+    assert eng.scheduler.dropped_tokens == 0
+    for r in eng.scheduler.active:
+        assert r.inflight == 0                # fully reconciled
+
+
+def test_lag_k_eos_overshoot_dropped_and_truncated():
+    """Worst-case lag (harvesting off): a depth-k engine keeps planning
+    through the EOS-bearing in-flight window, launching up to k extra
+    speculative tokens; the §5.3 one extra is kept-then-stripped, the late
+    ones are dropped at commit, and slots/KV pages are retired on the late
+    EOS."""
+    cfg = _cfg("tiny-toy")
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    prompt = [5, 9, 11]
+    eos = _probe_eos(cfg, params, prompt)
+
+    outs = {}
+    for depth in (0, 2, 3):
+        eng = ServeEngine(cfg, params, max_slots=2, max_len=32,
+                          discrete_sizes=(16, 8), avg_decode_len=4,
+                          async_depth=depth, async_harvest=False)
+        eng.submit(Request(rid=0, prompt=list(prompt), max_new_tokens=6,
+                           eos_id=eos))
+        done = eng.run()
+        assert len(done) == 1
+        outs[depth] = done[0].output
+        assert done[0].output[-1] == eos      # stripped to the EOS token
+        if depth == 0:
+            assert eng.scheduler.dropped_tokens == 0
+        else:
+            # deterministic worst-case: EOS is the first sampled token, the
+            # pipeline launches depth speculative decodes before its commit
+            # lands; one is the §5.3 extra, depth-1 arrive late and drop
+            assert eng.stats.decode_tokens == depth
+            assert eng.scheduler.dropped_tokens == depth - 1
+        # KV pages and the slot retired despite the late EOS
+        assert eng.kv.pages_used == 0
+        assert len(eng.slot_free) == 2
+    assert outs[0] == outs[2] == outs[3]
+
+
+def test_speculation_respects_max_new_tokens():
+    """The launch-side cap (len(output) + inflight) keeps a deep pipeline
+    from ever launching past max_new_tokens — no dropped tokens on a
+    cap-finished request."""
+    cfg = _cfg("tiny-toy")
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    for depth in (2, 4):
+        eng = ServeEngine(cfg, params, max_slots=2, max_len=32,
+                          discrete_sizes=(16, 8), avg_decode_len=4,
+                          async_depth=depth, async_harvest=False)
+        eng.submit(Request(rid=0,
+                           prompt=list(rng.integers(0, cfg.vocab_size,
+                                                    size=7)),
+                           max_new_tokens=3))
+        done = eng.run()
+        assert len(done[0].output) == 3
+        assert eng.stats.decode_tokens == 2   # final prefill samples tok 1
+        assert eng.scheduler.dropped_tokens == 0
+
+
+def test_async_compile_cache_bound_unchanged():
+    """The device-resident last_token buffer is a traced operand, not a
+    trace axis: depth-1 and depth-0 engines compile the same program set,
+    bounded by (|T buckets| + 1) × |kv buckets|."""
+    cfg = get_config("tiny-toy")
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    sizes = (32, 16, 8)
+
+    def load(depth):
+        eng = ServeEngine(cfg, params, max_slots=4, max_len=64,
+                          discrete_sizes=sizes, avg_decode_len=4,
+                          async_depth=depth)
+        rng = np.random.default_rng(3)
+        for i in range(8):
+            eng.submit(Request(
+                rid=i,
+                prompt=list(rng.integers(0, cfg.vocab_size,
+                                         size=int(rng.integers(3, 40)))),
+                max_new_tokens=3))
+        eng.run()
+        return eng
+
+    eager, asyn = load(0), load(1)
+    bound = (len(sizes) + 1) * len(eager.kv_buckets)
+    assert eager._packed_step._cache_size() <= bound
+    assert asyn._packed_step._cache_size() == eager._packed_step._cache_size()
+
+
+def test_async_eager_equivalence_smoke():
+    """CI benchmark-smoke gate: tiny f32 config, async_depth 0 and 1
+    produce identical outputs after EOS-strip."""
+    cfg = _cfg("tiny-toy")
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(4)
+    prompts = [list(rng.integers(0, cfg.vocab_size, size=8))
+               for _ in range(3)]
+    eos = _probe_eos(cfg, params, prompts[0])
+    _, out0 = _run(cfg, params, prompts, eos, async_depth=0)
+    _, out1 = _run(cfg, params, prompts, eos, async_depth=1)
+    assert out0 == out1
+
+
+def test_lockstep_plan_commit_driver_makes_progress():
+    """Direct plan()/commit() drivers (no engine, no mark_launched) must
+    keep the pre-§10 contract: commit advances launch state so the next
+    plan's chunks move forward instead of re-emitting offset 0 forever."""
+    kv = PagedKVManager(total_pages=1024, page_size=16, bytes_per_token=64,
+                        avg_decode_len=8)
+    sched = GlobalBatchScheduler(kv, discrete_sizes=(64, 32, 16, 8),
+                                 max_active=8)
+    sched.submit(Request(rid=0, prompt=list(range(100)), max_new_tokens=2))
+    iters = 0
+    while (plan := sched.plan()) is not None:
+        iters += 1
+        assert iters < 50, "plan()/commit() livelocked"
+        sampled = {}
+        for c in plan.prefill:
+            assert c.offset + c.length <= 100     # never past the prompt
+            if c.offset + c.length == c.req.prompt_len:
+                sampled[c.req.rid] = 0
+        for r in plan.decode:
+            sampled[r.rid] = 0
+        sched.commit(plan, sampled, 0.0)
+    assert sched.n_active == 0                    # ran to completion
+
+
+# ---------------------------------------------------------------------------
+# scheduler defensive-branch satellites
+# ---------------------------------------------------------------------------
+def _sched(**kw):
+    kv = PagedKVManager(total_pages=1024, page_size=16, bytes_per_token=64,
+                        avg_decode_len=8)
+    return GlobalBatchScheduler(kv, **kw)
+
+
+def test_bucket_tokens_overflow_rounds_to_next_multiple():
+    """Tokens beyond the largest discrete size take the next multiple of it
+    (defensive: no real plan should get there, but the launch shape must
+    still cover the stream)."""
+    sched = _sched(discrete_sizes=(16, 8), max_active=64)
+    assert sched.bucket_tokens(16) == 16
+    assert sched.bucket_tokens(17) == 32      # ceil(17/16) * 16
+    assert sched.bucket_tokens(40) == 48
+    assert sched.bucket_tokens(64) == 64
+
+
+def test_bucket_tokens_max_active_floor():
+    """max_active below the smallest discrete size joins the grid as a
+    floor bucket (decode-only iterations never exceed it)."""
+    sched = _sched(discrete_sizes=(16, 8), max_active=4)
+    assert sched.bucket_tokens(3) == 4
+    assert sched.bucket_tokens(4) == 4
+    assert sched.bucket_tokens(5) == 8
+
+
+def test_bucket_kv_saturates_at_grid_top():
+    sched = _sched(discrete_sizes=(16, 8), max_active=8,
+                   kv_buckets=(64, 128, 256))
+    assert sched.bucket_kv(1) == 64
+    assert sched.bucket_kv(64) == 64
+    assert sched.bucket_kv(65) == 128
+    assert sched.bucket_kv(256) == 256
+    assert sched.bucket_kv(1000) == 256       # saturation: top of the grid
+    with pytest.raises(AssertionError):
+        _sched(discrete_sizes=(16, 8), max_active=8).bucket_kv(1)
+
+
+# ---------------------------------------------------------------------------
+# size-only KV offload accounting satellite
+# ---------------------------------------------------------------------------
+def test_offload_size_only_accounts_without_blob():
+    kv = PagedKVManager(total_pages=32, page_size=8, bytes_per_token=64,
+                        avg_decode_len=8)
+    kv.allocate(1, 24)
+    kv.offload(1, nbytes=24 * 64)
+    assert kv.pages_used == 0                 # pages retired
+    assert kv.stats.offload_bytes == 24 * 64
+    assert kv.stats.host_bytes == 24 * 64
+    assert kv.stats.aggregated_copies == 1
+    # no data to restore: a miss that neither allocates nor drops the entry
+    assert kv.upload(1, np.float32, (24 * 16,)) is None
+    assert kv.pages_used == 0
+    assert 1 in kv.host_pool
+
+
+def test_reoffload_does_not_drift_host_bytes():
+    """Re-offloading a rid whose entry is still pooled (the steady state
+    for size-only entries — upload() never pops them) replaces the entry:
+    host_bytes must not accumulate per round, or it drifts past capacity
+    and the LRU loop evicts the whole pool forever."""
+    kv = PagedKVManager(total_pages=32, page_size=8, bytes_per_token=64,
+                        avg_decode_len=8, host_capacity_bytes=10_000)
+    for _round in range(5):
+        kv.allocate(1, 8)
+        kv.offload(1, nbytes=400)
+        assert kv.upload(1, np.float32, (100,)) is None   # size-only miss
+    assert kv.stats.host_bytes == 400                     # one live entry
+    assert kv.stats.offload_bytes == 5 * 400              # traffic counted
+    assert kv.stats.discarded_requests == 0
+    # real-blob replacement accounts the same way
+    kv.allocate(1, 8)
+    kv.offload(1, np.zeros(100, np.float32))
+    assert kv.stats.host_bytes == 400
+
+
+def test_offload_size_only_participates_in_lru():
+    kv = PagedKVManager(total_pages=64, page_size=8, bytes_per_token=64,
+                        avg_decode_len=8, host_capacity_bytes=1000)
+    for rid in range(5):
+        kv.allocate(rid, 8)
+        kv.offload(rid, nbytes=400)
+    assert kv.stats.host_bytes <= 1000
+    assert kv.stats.discarded_requests == 5 - len(kv.host_pool)
+    # mixed real/size-only entries evict coherently
+    kv.allocate(10, 8)
+    kv.offload(10, np.zeros(100, np.float32))          # real 400 B blob
+    assert kv.stats.host_bytes <= 1000
+
+
+def test_offload_requires_exactly_one_payload():
+    kv = PagedKVManager(total_pages=8, page_size=8, bytes_per_token=64,
+                        avg_decode_len=8)
+    kv.allocate(1, 8)
+    with pytest.raises(AssertionError):
+        kv.offload(1)
+    with pytest.raises(AssertionError):
+        kv.offload(1, np.zeros(4, np.float32), nbytes=16)
