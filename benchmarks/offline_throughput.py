@@ -217,12 +217,70 @@ def engine_measured(n_requests: int = 16, attn_fast=None,
     return rows
 
 
+def engine_tp_ab(tp: int, n_requests: int = 12) -> list[dict]:
+    """Tensor-parallel axis (DESIGN.md §11): the async packed step at tp=1
+    vs tp=N (shard_map over host-platform devices), warmed, same workload.
+    On this CPU container tp>1 adds real ring collectives on one physical
+    core — the interesting numbers are the A/B shape (still 1 dispatch + 1
+    sync/iter) and the modeled collective bytes/iteration, not a speedup."""
+    cfg = get_config("tiny-toy")
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    name, p, d, max_len = "splitwise-like", 40, 8, 128
+    rows = []
+    raw = {}
+    for tp_deg in (1, tp):
+        eng = ServeEngine(cfg, params, max_slots=8, max_len=max_len,
+                          discrete_sizes=(64, 32, 16, 8), avg_decode_len=d,
+                          step_mode="packed", async_depth=1, tp=tp_deg)
+        _submit_workload(eng, name, p, d, n_requests, cfg.vocab_size, 0)
+        eng.run()                                  # warmup: compiles all
+        warm = dataclasses.replace(eng.stats)
+        _submit_workload(eng, name, p, d, n_requests, cfg.vocab_size,
+                         n_requests)
+        done = eng.run()
+        st = eng.stats
+        tokens = st.total_tokens - warm.total_tokens
+        wall = st.wall_time - warm.wall_time
+        iters = st.iterations - warm.iterations
+        raw[tp_deg] = tokens / max(wall, 1e-9)
+        rows.append({
+            "bench": "offline_throughput_engine",
+            "case": f"tiny-toy/{name}/packed-tp{tp_deg}",
+            "tp": tp_deg,
+            "finished": len(done),
+            "tokens": tokens,
+            "tok_s_cpu": round(raw[tp_deg], 1),
+            "iters": iters,
+            "dispatches_per_iter": round(
+                (st.model_dispatches - warm.model_dispatches)
+                / max(iters, 1), 3),
+            "host_syncs_per_iter": round(
+                (st.host_syncs - warm.host_syncs) / max(iters, 1), 3),
+            "prefill_expansion": round(
+                (st.prefill_model_tokens - warm.prefill_model_tokens)
+                / max(st.prefill_tokens - warm.prefill_tokens, 1), 3),
+            "pad_fraction": round(
+                (st.packed_pad_tokens - warm.packed_pad_tokens)
+                / max(tokens + st.packed_pad_tokens
+                      - warm.packed_pad_tokens, 1), 3),
+            "tp_collective_bytes_per_iter": round(
+                (st.tp_collective_bytes - warm.tp_collective_bytes)
+                / max(iters, 1)),
+        })
+    rows[-1]["speedup_vs_tp1"] = round(raw[tp] / max(raw[1], 1e-9), 3)
+    return rows
+
+
 def run(engine_only: bool = False, attn_fast=None,
-        attn_stream=None) -> list[dict]:
+        attn_stream=None, tp: int = 1, tp_only: bool = False) -> list[dict]:
+    if tp_only:
+        return engine_tp_ab(tp)
     out = [] if engine_only else (
         modeled("llama2-70b", cm.A100_80G, 8)
         + modeled("qwen3-8b", cm.TPU_V5E, 16))
     out += engine_measured(attn_fast=attn_fast, attn_stream=attn_stream)
+    if tp > 1:
+        out += engine_tp_ab(tp)
     return out
 
 
@@ -235,6 +293,15 @@ def main(argv=None) -> None:
                     help="skip the modeled-hardware rows (CI smoke)")
     ap.add_argument("--json", default=None,
                     help="also write the rows as a JSON artifact")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="also A/B the packed step at tp=1 vs tp=N "
+                         "(DESIGN.md §11; forces N host-platform devices — "
+                         "this changes the process's device split, so CI "
+                         "runs the tp axis as a separate --tp-only "
+                         "invocation to keep the baseline rows' "
+                         "environment unchanged)")
+    ap.add_argument("--tp-only", action="store_true",
+                    help="run only the tp=1-vs-tp=N A/B rows")
     ap.add_argument("--attn-fast", action=argparse.BooleanOptionalAction,
                     default=None,
                     help="no-upcast attention refs (§Perf HC3); default: "
@@ -244,8 +311,16 @@ def main(argv=None) -> None:
                     help="streamed long-seq flash ref; default: "
                          "REPRO_ATTN_STREAM env")
     args = ap.parse_args(argv)
+    if args.tp_only and args.tp <= 1:
+        ap.error("--tp-only needs --tp N with N > 1")
+    if args.tp > 1:
+        # before the first jax operation: importing jax does not initialize
+        # the backend, so the host-device flag still takes effect here
+        from repro.launch.serve import ensure_host_devices
+        ensure_host_devices(args.tp)
     rows = run(engine_only=args.engine_only, attn_fast=args.attn_fast,
-               attn_stream=args.attn_stream)
+               attn_stream=args.attn_stream, tp=args.tp,
+               tp_only=args.tp_only)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(rows, f, indent=2)
@@ -268,6 +343,12 @@ def main(argv=None) -> None:
                          f"blocked {r['blocked_sync_s']}s "
                          f"host {r['host_s']}s, "
                          f"{r['overshoot_tokens']} overshoot]")
+            if "tp" in r:
+                extra = (f" [tp={r['tp']}: "
+                         f"{r['tp_collective_bytes_per_iter'] / 1e3:.1f} KB "
+                         f"collective/it"
+                         + (f", {r['speedup_vs_tp1']}x vs tp1"
+                            if "speedup_vs_tp1" in r else "") + "]")
             sweep = (f", kv sweep {r['attn_kv_sweep_frac']}x"
                      if r.get("attn_kv_sweep_frac") is not None else "")
             print(f"fig10/{r['case']},0.0,{r['tok_s_cpu']} tok/s CPU "

@@ -16,6 +16,21 @@ def make_production_mesh(*, multi_pod: bool = False):
                          axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
 
 
+def make_tp_mesh(tp: int):
+    """1-D tensor-parallel mesh over the first ``tp`` local devices (the
+    serving engine's ``ServeEngine(tp=N)`` mesh, DESIGN.md §11).  On this
+    CPU container the devices come from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``."""
+    import numpy as np
+    devs = jax.devices()
+    if len(devs) < tp:
+        raise RuntimeError(
+            f"tp={tp} needs {tp} devices but only {len(devs)} are visible; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{tp} (host-platform devices) or run on a {tp}-chip slice")
+    return jax.sharding.Mesh(np.array(devs[:tp]), ("model",))
+
+
 def tp_size(mesh) -> int:
     return mesh.shape["model"]
 

@@ -6,6 +6,7 @@
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -15,6 +16,20 @@ from repro.configs import get_config, scale_down
 from repro.models import model as model_lib
 from repro.serving.engine import ServeEngine
 from repro.serving.request import Request
+
+
+def ensure_host_devices(n: int) -> None:
+    """Give this process ``n`` host-platform devices for ``--tp n`` runs on
+    CPU.  Importing jax doesn't initialize the backend, so appending the
+    flag first thing in main() — before any jax *operation* — is enough; if
+    the backend somehow initialized earlier with too few devices,
+    ``make_tp_mesh`` raises the actionable error."""
+    if n <= 1:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}").strip()
 
 
 def make_requests(n: int, vocab: int, seed: int = 0, p_mean: int = 24,
@@ -45,6 +60,12 @@ def main() -> None:
                          "sampled tokens (DESIGN.md §10); 0 = eager "
                          "lock-step (bit-identical to pre-§10 behaviour); "
                          "default: 1 for the packed step, 0 for legacy")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree (DESIGN.md §11): the "
+                         "packed step runs as one shard_map program over a "
+                         "1-D model mesh; on CPU the devices come from "
+                         "--xla_force_host_platform_device_count (set "
+                         "automatically when launching this driver)")
     ap.add_argument("--no-kv-bucketing", action="store_true",
                     help="sweep max_len every iteration instead of the "
                          "KV-length bucket (DESIGN.md §9; A/B baseline)")
@@ -61,6 +82,7 @@ def main() -> None:
     ap.add_argument("--duration", type=float, default=10.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    ensure_host_devices(args.tp)     # before the first jax operation
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -68,6 +90,7 @@ def main() -> None:
     params = model_lib.init(cfg, jax.random.PRNGKey(args.seed))
     eng = ServeEngine(cfg, params, max_slots=args.slots, max_len=args.max_len,
                       step_mode=args.step_mode, async_depth=args.async_depth,
+                      tp=args.tp,
                       kv_bucketing=not args.no_kv_bucketing,
                       attn_fast=args.attn_fast, attn_stream=args.attn_stream)
     reqs = make_requests(args.requests, cfg.vocab_size, args.seed)
@@ -122,6 +145,10 @@ def main() -> None:
           f"dispatch {st.dispatch_time*1e3:.0f} ms "
           f"(wall {st.wall_time*1e3:.0f} ms), "
           f"{eng.scheduler.dropped_tokens} overshoot tokens dropped")
+    if eng.tp > 1:
+        print(f"tp={eng.tp}: ~{st.tp_collective_bytes_per_iter / 1e3:.1f} KB "
+              f"modeled collective traffic/iter "
+              f"({st.tp_collective_bytes / 1e6:.2f} MB total)")
     print(f"dense batch histogram: {dict(sorted(st.dense_batch_hist.items()))}")
     if st.kv_bucket_hist:
         swept = sum(b * n for b, n in st.kv_bucket_hist.items())

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.distributed import tp
 from repro.kernels import ops
 from repro.models.layers import apply_rope, apply_rope_nohead, rmsnorm, shard
 from repro.models.param import ParamDef
@@ -187,7 +188,12 @@ def gqa_packed(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
     ``kv_bucket`` (static, DESIGN.md §9): the engine's bound on this
     iteration's ``max(positions) + 1`` — attention reads only that many
     cache rows per slot, so its FLOPs/bytes scale with actual context, not
-    ``max_len``.  The scatter still targets the full cache."""
+    ``max_len``.  The scatter still targets the full cache.
+
+    Under tensor parallelism (DESIGN.md §11) the projections and the slot
+    cache are sharded along (kv-)heads, attention is per-head local, and
+    only the output projection reduces across shards
+    (``tp.out_project`` — a nano-batch-chunked ring all-reduce)."""
     q, k_new, v_new = _qkv(cfg, p, x, positions)
     k_cache = cache["k"].at[token_slot, token_wpos].set(
         k_new[0].astype(cache["k"].dtype), mode="drop")
@@ -197,7 +203,7 @@ def gqa_packed(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
     v_cache = shard(v_cache, "batch", "kv_seq", "act_kv_heads", None)
     out = ops.packed_attention(q[0], k_cache, v_cache, token_slot,
                                positions[0] + 1, kv_bucket=kv_bucket)
-    y = jnp.einsum("thk,hkd->td", out, p["wo"])[None]
+    y = tp.out_project(out, p["wo"])[None]
     y = shard(y, "batch", "act_seq", "embed")
     return y, {"k": k_cache, "v": v_cache}
 
@@ -382,7 +388,12 @@ def mla_packed(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
 
     ``kv_bucket`` (static, DESIGN.md §9) slices the latent views *before*
     the absorbed-key concat, so the materialized (N, S, rank + rope) key
-    tensor also scales with the bucket, not ``max_len``."""
+    tensor also scales with the bucket, not ``max_len``.
+
+    Under tensor parallelism (DESIGN.md §11) the latent path — ``c_kv`` /
+    ``k_rope`` and their cache — is replicated (it is one shared kv
+    "head"); the absorbed per-head projections are sharded along heads and
+    the output projection reduces across shards (``tp.out_project``)."""
     m = cfg.mla
     q_abs = _mla_q_absorbed(cfg, p, x, positions)        # (1,T,H,rank+rope)
     c_new, r_new = _mla_latent(cfg, p, x, positions)
@@ -402,7 +413,7 @@ def mla_packed(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
                                    positions[0] + 1, logit_scale=scale)
     out = _mla_unabsorb(p, out_lat, x.dtype)             # (T,H,v_head)
     out = shard(out[None], "batch", "act_seq", "act_heads", None)[0]
-    y = jnp.einsum("thk,hkd->td", out, p["wo"])[None]
+    y = tp.out_project(out, p["wo"])[None]
     y = shard(y, "batch", "act_seq", "embed")
     return y, {"c_kv": ckv, "k_rope": krp}
 

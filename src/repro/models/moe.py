@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, MoEConfig
+from repro.distributed import tp
 from repro.models.layers import shard, silu
 from repro.models.param import ParamDef
 
@@ -53,7 +54,12 @@ def _ffn_defs(d: int, d_ff: int, dt: str, gated: bool = True) -> dict:
 
 
 def dense_ffn(p: dict, x: jax.Array) -> jax.Array:
-    """SwiGLU when w_gate present, else plain GELU MLP.  x: (..., D)."""
+    """SwiGLU when w_gate present, else plain GELU MLP.  x: (..., D).
+
+    Under tensor parallelism (DESIGN.md §11) ``w_up``/``w_gate`` are
+    column-parallel (separate matrices — no fused-split issue) and
+    ``w_down`` is row-parallel: ``tp.row_parallel`` launches the
+    all-reduce per nano-batch group; identity einsum at tp=1."""
     u = jnp.einsum("...d,df->...f", x, p["w_up"])
     if "w_gate" in p:
         g = jnp.einsum("...d,df->...f", x, p["w_gate"])
@@ -61,7 +67,7 @@ def dense_ffn(p: dict, x: jax.Array) -> jax.Array:
     else:
         h = jax.nn.gelu(u)
     h = shard(h, *(("batch",) + (None,) * (x.ndim - 2) + ("act_ff",)))
-    y = jnp.einsum("...f,fd->...d", h, p["w_down"])
+    y = tp.row_parallel(h, p["w_down"])
     return shard(y, *(("batch",) + (None,) * (x.ndim - 2) + ("embed",)))
 
 
@@ -123,6 +129,16 @@ def moe_ffn(cfg: ModelConfig, p: dict, x: jax.Array, *,
         combine = combine + pos_oh.astype(jnp.float32) * gates[..., k][..., None, None]
         prev_counts = prev_counts + mask.sum(axis=1, keepdims=True)
 
+    # Manual expert parallelism under the TP packed step (DESIGN.md §11):
+    # routing/dispatch were computed replicated; each shard processes its
+    # local expert block (w_gate/w_up/w_down hold E/p experts) and the
+    # combine over experts becomes a cross-shard partial sum -> psum.
+    ctx = tp.active()
+    if ctx is not None:
+        e_loc = e // ctx.size
+        start = jax.lax.axis_index(ctx.axis) * e_loc
+        dispatch = jax.lax.dynamic_slice_in_dim(dispatch, start, e_loc, axis=2)
+        combine = jax.lax.dynamic_slice_in_dim(combine, start, e_loc, axis=2)
     # dispatch: (G,S,E,C) x (G,S,D) -> (E,G,C,D), experts sharded on model
     expert_in = jnp.einsum("gsec,gsd->egcd", dispatch,
                            grouped.astype(jnp.bfloat16))
@@ -131,7 +147,8 @@ def moe_ffn(cfg: ModelConfig, p: dict, x: jax.Array, *,
         jnp.einsum("egcd,edf->egcf", expert_in, p["w_up"])
     expert_out = jnp.einsum("egcf,efd->egcd", h, p["w_down"])
     expert_out = shard(expert_out, "act_experts", "batch", None, "embed")
-    y = jnp.einsum("gsec,egcd->gsd", combine.astype(jnp.bfloat16), expert_out)
+    y = tp.psum(jnp.einsum("gsec,egcd->gsd", combine.astype(jnp.bfloat16),
+                           expert_out))
     y = y.reshape(g * sg, d)[:t].reshape(b, s, d).astype(x.dtype)
 
     if m.num_shared_experts:

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import MambaConfig, ModelConfig
+from repro.distributed import tp
 from repro.kernels import ops
 from repro.kernels.ref import ssm_step_ref
 from repro.models.layers import (causal_conv1d, causal_conv1d_step, conv_tail,
@@ -54,7 +55,10 @@ def _pre(cfg: ModelConfig, p: dict, x: jax.Array):
 
 def _ssm_params(cfg: ModelConfig, p: dict, xc: jax.Array):
     d_in, dt_rank, n = _dims(cfg)
-    proj = jnp.einsum("bsk,kr->bsr", xc, p["w_x"])
+    # dt/B/C are computed from the *full* inner width; under TP the rows of
+    # w_x are channel-sharded, so the contraction is a row-parallel partial
+    # sum — psum'd to the replicated (dt_rank + 2N) projection (no-op at tp=1)
+    proj = tp.psum(jnp.einsum("bsk,kr->bsr", xc, p["w_x"]))
     dt_low, b, c = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
     dt = softplus(jnp.einsum("bsr,rk->bsk", dt_low, p["w_dt"]).astype(jnp.float32)
                   + p["dt_bias"])
@@ -147,7 +151,9 @@ def mamba_packed(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
         (xs[0], token_slot, token_active))
     y = ys[None] * silu(z)
     y = shard(y, "batch", "act_seq", "act_inner")
-    out = jnp.einsum("bsk,kd->bsd", y, p["w_out"])
+    # row-parallel under TP (w_out rows are the local channel block); the
+    # all-reduce is ring-decomposed per nano-batch group (DESIGN.md §11)
+    out = tp.row_parallel(y, p["w_out"])
     out = shard(out, "batch", "act_seq", "embed")
     return out, {"conv": conv_f, "ssm": ssm_f}
 

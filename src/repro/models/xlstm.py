@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, XLSTMConfig
+from repro.distributed import tp
 from repro.kernels.ref import mlstm_chunk_ref, mlstm_step_ref
 from repro.models.layers import (causal_conv1d, causal_conv1d_step, conv_tail,
                                  rmsnorm, shard, silu)
@@ -234,9 +235,18 @@ def mlstm_packed(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
     dense over the (1, T) packed stream; the recurrent part is one
     ``lax.scan`` over tokens that gathers the token's slot state
     (conv tail + matrix memory (C, n, m)), advances it one step, and
-    scatters it back — active-masked so padding never commits state."""
+    scatters it back — active-masked so padding never commits state.
+
+    Under tensor parallelism (DESIGN.md §11) the block is sharded along
+    *heads* (= contiguous ``d_in`` channel blocks): conv, per-head q/k/v
+    and the (C, n, m) memory are local; the i/f gates contract over the
+    full ``d_in`` so their projection is row-parallel (psum, then slice
+    back to the local heads); the out-norm reduces over the full width via
+    ``tp.rmsnorm_sharded``; ``w_down`` is row-parallel."""
     d_in, h, dh = _mlstm_dims(cfg)
-    xz = jnp.einsum("bsd,dk->bsk", x, p["w_up"])         # (1, T, 2*d_in)
+    ws = tp.world()
+    d_in_l, h_l = d_in // ws, h // ws        # local widths (== global at tp=1)
+    xz = jnp.einsum("bsd,dk->bsk", x, p["w_up"])         # (1, T, 2*d_in_l)
     xs, z = jnp.split(xz, 2, axis=-1)
 
     def step(carry, inp):
@@ -248,17 +258,20 @@ def mlstm_packed(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
         m0 = jax.lax.dynamic_index_in_dim(m_c, s_i, 0)
         xc_t, new_hist = causal_conv1d_step(xs_t[None], hist, p["conv_w"],
                                             p["conv_b"])
-        xc_t = silu(xc_t)                                # (1, d_in)
-        xch = xc_t.reshape(1, h, dh)
-        xsh = xs_t[None].reshape(1, h, dh)
+        xc_t = silu(xc_t)                                # (1, d_in_l)
+        xch = xc_t.reshape(1, h_l, dh)
+        xsh = xs_t[None].reshape(1, h_l, dh)
         q = jnp.einsum("bhk,hkj->bhj", xch, p["w_q"])
         k = jnp.einsum("bhk,hkj->bhj", xch, p["w_k"])
         v = jnp.einsum("bhk,hkj->bhj", xsh, p["w_v"])
-        ig = jnp.einsum("bk,kh->bh", xc_t.astype(jnp.float32), p["w_i"]) \
-            + p["b_i"]
-        fg = jax.nn.log_sigmoid(
-            jnp.einsum("bk,kh->bh", xc_t.astype(jnp.float32), p["w_f"])
-            + p["b_f"])
+        # gates see the full inner width: row-parallel partial -> psum to
+        # the replicated (1, h) gates, then slice the local head block
+        ig = tp.shard_block(
+            tp.psum(jnp.einsum("bk,kh->bh", xc_t.astype(jnp.float32),
+                               p["w_i"])) + p["b_i"])
+        fg = jax.nn.log_sigmoid(tp.shard_block(
+            tp.psum(jnp.einsum("bk,kh->bh", xc_t.astype(jnp.float32),
+                               p["w_f"])) + p["b_f"]))
         y_t, (c1, n1, m1) = mlstm_step_ref(q, k, v, ig, fg, (c0, n0, m0))
         conv_c = jax.lax.dynamic_update_index_in_dim(
             conv_c, jnp.where(act, new_hist, hist).astype(conv_c.dtype),
@@ -269,15 +282,15 @@ def mlstm_packed(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
             n_c, jnp.where(act, n1, n0), s_i, 0)
         m_c = jax.lax.dynamic_update_index_in_dim(
             m_c, jnp.where(act, m1, m0), s_i, 0)
-        return (conv_c, c_c, n_c, m_c), y_t.reshape(d_in)
+        return (conv_c, c_c, n_c, m_c), y_t.reshape(d_in_l)
 
     (conv_f, c_f, n_f, m_f), ys = jax.lax.scan(
         step, (cache["conv"], cache["c"], cache["n"], cache["m"]),
         (xs[0], token_slot, token_active))
-    y = rmsnorm(ys[None].astype(x.dtype), p["out_norm"], cfg.norm_eps) \
-        * silu(z)
+    y = tp.rmsnorm_sharded(ys[None].astype(x.dtype), p["out_norm"],
+                           cfg.norm_eps) * silu(z)
     y = shard(y, "batch", "act_seq", "act_inner")
-    out = jnp.einsum("bsk,kd->bsd", y, p["w_down"])
+    out = tp.row_parallel(y, p["w_down"])
     out = shard(out, "batch", "act_seq", "embed")
     return out, {"conv": conv_f, "c": c_f, "n": n_f, "m": m_f}
 
@@ -412,7 +425,12 @@ def slstm_packed(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
     """Token-packed dense-batch step (DESIGN.md §8): per-token slot-state
     scan for the sequential sLSTM recurrence (gather state, one step,
     active-masked scatter back); the post-recurrence norm + GLU FFN run
-    dense over the packed stream."""
+    dense over the packed stream.
+
+    Under tensor parallelism (DESIGN.md §11 / §4) the tiny scalar
+    recurrence runs *replicated* on every shard; only the GLU FFN is
+    column/row-parallel (``w_ffn_up`` columns re-interleaved so each shard
+    holds matching u‖g halves; ``w_ffn_down`` all-reduced)."""
     d = cfg.d_model
 
     def step(carry, inp):
@@ -450,7 +468,7 @@ def slstm_packed(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
     up = jnp.einsum("bsd,df->bsf", y, p["w_ffn_up"])
     u, g = jnp.split(up, 2, axis=-1)
     yf = shard(u * silu(g), "batch", "act_seq", "act_ff")
-    out = jnp.einsum("bsf,fd->bsd", yf, p["w_ffn_down"])
+    out = tp.row_parallel(yf, p["w_ffn_down"])
     out = shard(out, "batch", "act_seq", "embed")
     return out, {"conv": conv_f, "c": c_f, "n": n_f, "h": h_f, "m": m_f}
 

@@ -47,10 +47,24 @@ each gathering/scattering the chunk's slot sub-cache (DESIGN.md §7).  The
 pre-§7 recompute path (O(p²/chunk) FLOPs) remains as
 ``prefill_mode="recompute"`` (implies the legacy step).
 
-On TPU the per-iteration program is the NanoFlow pipeline (nano-batched,
-overlapped ops); on this CPU container the same engine logic drives the ref
-execution path, and the intra-device overlap is *modeled* by core/autosearch
-(benchmarks report both).
+**Tensor-parallel serving (``tp=N``, DESIGN.md §11).**  The same packed
+step runs as **one ``shard_map`` program** over a 1-D ``("model",)`` mesh:
+params and the slot KV caches are sharded along heads/channels per mixer
+family (GQA kv heads; MLA keeps the latent replicated and shards the
+absorbed per-head projections; SSM/xLSTM shard the state's head/channel
+axis; sLSTM's tiny recurrence stays replicated), attention and FFN output
+projections ride the ring-decomposed collective matmuls of
+``distributed/collective_matmul`` launched *per nano-batch group* — so
+segment group i's all-reduce is dependency-free of group i+1's GEMMs, the
+paper's §4.3 network/compute overlap as real launched collectives.  The
+``last_token`` buffer, sampled tokens and ``cache_len`` stay replicated
+(sampling reads full-vocab logits on every shard), so the iteration is
+still exactly one dispatch + one (deferred) sync and ``async_depth``
+composes unchanged; the compile cache keeps the
+(|T buckets| + 1) × |kv buckets| bound per mesh.  ``tp=1`` is exactly the
+single-device path; on this CPU container the mesh comes from
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` and the
+*intra*-device overlap is still modeled by core/autosearch.
 """
 from __future__ import annotations
 
@@ -62,15 +76,46 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ATTN, ModelConfig
+from repro.core.nanobatch import nano_batch_sizes_for
+from repro.distributed import tp as tp_lib
+from repro.distributed.sharding import shard_map_compat
 from repro.kernels import ops
+from repro.launch.mesh import make_tp_mesh
+from repro.models import blocks
 from repro.models import model as model_lib
 from repro.serving import sampling
 from repro.serving.kvcache import PagedKVManager
 from repro.serving.request import Request
 from repro.serving.scheduler import (BatchPlan, GlobalBatchScheduler,
                                      default_kv_buckets)
+
+
+def kv_bytes_per_token(cfg: ModelConfig) -> int:
+    """Per-token KV-cache bytes, derived from the *actual* attention cache
+    leaves (``jax.eval_shape`` — no allocation): for each attention layer,
+    the bytes of one sequence row of every leaf.  GQA: ``2·kv·hd·itemsize``
+    per layer; MLA caches only the latent ``c_kv + k_rope`` (the absorbed
+    path never materializes per-head K/V — charging the GQA formula made
+    deepseek-style admission ~an order of magnitude too conservative);
+    attention-free SSM/xLSTM models carry O(1) recurrent state and no
+    per-token pages at all, so this is 0 for them (the old
+    ``max(n_attn, 1)`` floor charged them per-token paging)."""
+    per_spec: dict = {}
+    total = 0
+    for spec in cfg.layer_specs():
+        if spec.mixer != ATTN:
+            continue
+        if spec not in per_spec:
+            leaves = jax.eval_shape(
+                lambda s=spec: blocks.block_init_cache(cfg, s, 1, 1, 2))
+            per_spec[spec] = sum(
+                int(np.prod(leaf.shape[2:])) * leaf.dtype.itemsize
+                for leaf in jax.tree.leaves(leaves))
+        total += per_spec[spec]
+    return total
 
 
 @dataclasses.dataclass
@@ -106,6 +151,9 @@ class EngineStats:
     # launched; compare against launch_tokens × max_len to see the bucketing
     # saving (attention FLOPs/bytes scale with this, not with max_len)
     packed_attn_kv_rows: int = 0
+    # modeled TP collective traffic (DESIGN.md §11; ring all-reduce wire
+    # bytes per tp_lib.collective_bytes_per_iter) — 0 at tp=1
+    tp_collective_bytes: int = 0
 
     @property
     def total_tokens(self) -> int:
@@ -137,6 +185,11 @@ class EngineStats:
         return self.blocking_syncs / self.iterations if self.iterations \
             else 0.0
 
+    @property
+    def tp_collective_bytes_per_iter(self) -> float:
+        return self.tp_collective_bytes / self.iterations \
+            if self.iterations else 0.0
+
 
 @dataclasses.dataclass
 class _InFlight:
@@ -157,6 +210,7 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 8,
                  max_len: int = 512, page_size: int = 16,
                  total_pages: Optional[int] = None,
+                 kv_budget_bytes: Optional[int] = None,
                  avg_decode_len: float = 64.0,
                  discrete_sizes: tuple[int, ...] = (256, 128, 64, 32, 16, 8),
                  prefill_mode: str = "incremental",
@@ -164,6 +218,7 @@ class ServeEngine:
                  async_depth: Optional[int] = None,
                  async_harvest: bool = True,
                  nano: int = 2,
+                 tp: int = 1,
                  kv_buckets: Optional[tuple[int, ...]] = None,
                  kv_bucketing: bool = True,
                  attn_fast: Optional[bool] = None,
@@ -177,6 +232,9 @@ class ServeEngine:
         assert step_mode in ("packed", "legacy"), step_mode
         assert not (step_mode == "packed" and prefill_mode == "recompute"), \
             "packed step runs incremental prefill only"
+        assert tp >= 1, tp
+        assert tp == 1 or step_mode == "packed", \
+            "tensor-parallel serving (DESIGN.md §11) requires the packed step"
         if async_depth is None:
             # the pipeline is the default serving mode (§5.3 / DESIGN.md
             # §10); the legacy step has no deferred-sync path
@@ -220,10 +278,20 @@ class ServeEngine:
             self.kv_buckets = grid if grid[-1] == max_len \
                 else grid + (max_len,)
 
-        hd = cfg.resolved_head_dim
-        n_attn = max(sum(1 for s in cfg.layer_specs() if s.mixer == ATTN), 1)
-        kv_bytes = 2 * cfg.n_kv_heads * hd * 2 * n_attn
-        pages = total_pages or (max_slots * max_len // page_size)
+        # per-token KV bytes from the actual cache leaves — NOT the GQA
+        # formula: MLA caches only the latent (c_kv + k_rope) and
+        # attention-free recurrent models cache nothing per token
+        kv_bytes = kv_bytes_per_token(cfg)
+        if total_pages is not None:
+            pages = total_pages
+        elif kv_budget_bytes is not None and kv_bytes > 0:
+            # device KV budget in bytes -> pages the budget actually buys
+            # (what the wrong bytes-per-token used to corrupt: deepseek-style
+            # MLA got ~an order of magnitude fewer pages than its latent
+            # cache needs)
+            pages = max(int(kv_budget_bytes) // (kv_bytes * page_size), 1)
+        else:
+            pages = max_slots * max_len // page_size
         self.kv = PagedKVManager(total_pages=pages, page_size=page_size,
                                  bytes_per_token=kv_bytes,
                                  avg_decode_len=avg_decode_len)
@@ -250,13 +318,42 @@ class ServeEngine:
         # reused slot never leaks the previous request's recurrent state
         self._slot_init = model_lib.init_cache(cfg, 1, 1, max_len)
 
+        # tensor parallelism (DESIGN.md §11): 1-D ("model",) mesh, params
+        # and slot caches placed with the manual shard_map layout (fused
+        # x‖z / u‖g projection columns re-interleaved so each shard holds
+        # matching halves); the last_token / cache_len buffers stay
+        # replicated so the §10 feedback loop closes without a collective
+        self.tp = int(tp)
+        self._mesh = None
+        # modeled collective wire bytes per launched token (linear in T):
+        # resolved once here so the per-iteration stats update off the §10
+        # host hot path is a single multiply
+        self._tp_iter_bytes = tp_lib.collective_bytes_per_iter(
+            cfg, 1, self.tp, jnp.dtype(cfg.dtype).itemsize)
+        if self.tp > 1:
+            tp_lib.validate_tp(cfg, self.tp)
+            self._mesh = make_tp_mesh(self.tp)
+            self.params = tp_lib.shard_params_tp(cfg, self.params, self._mesh)
+            self.cache = tp_lib.shard_cache_tp(cfg, self.cache, self._mesh)
+            self._slot_init = tp_lib.shard_cache_tp(cfg, self._slot_init,
+                                                    self._mesh)
+            rep = NamedSharding(self._mesh, P())
+            self.cache_len = jax.device_put(self.cache_len, rep)
+            self.last_token = jax.device_put(self.last_token, rep)
+
         # one compiled program per (bucketed launch length T, kv bucket) —
         # the compile cache is bounded by |discrete dense sizes| × |kv
         # buckets| (kv_bucket is static: it sets the swept cache extent;
-        # the last_token buffer is a traced operand, NOT a trace axis)
-        self._packed_step = jax.jit(self._packed_impl,
-                                    donate_argnums=(1, 9),
-                                    static_argnums=(12,))
+        # the last_token buffer is a traced operand, NOT a trace axis).
+        # tp=1 jits the body directly (the exact single-device path);
+        # tp>1 wraps the same body in shard_map over the mesh — same
+        # trace axes, so the compile-cache bound is preserved per mesh
+        if self.tp == 1:
+            self._packed_step = jax.jit(self._packed_impl,
+                                        donate_argnums=(1, 9),
+                                        static_argnums=(12,))
+        else:
+            self._packed_step = self._build_packed_tp_step()
         self._decode_step = jax.jit(self._decode_impl, donate_argnums=(1,))
         # one compiled program per bucketed chunk length (scheduler-quantized)
         self._prefill_step = jax.jit(self._prefill_impl, donate_argnums=(1,))
@@ -311,6 +408,16 @@ class ServeEngine:
     def _packed_impl(self, params, cache, tokens, token_slot, token_pos,
                      token_wpos, token_active, cache_len, reset, last_token,
                      from_last, sample_slot, kv_bucket):
+        """tp=1 entry: the packed body with the fresh-slot cache closed over
+        (the TP entry passes it as a shard_map operand instead)."""
+        return self._packed_core(params, cache, tokens, token_slot, token_pos,
+                                 token_wpos, token_active, cache_len, reset,
+                                 last_token, from_last, sample_slot,
+                                 self._slot_init, kv_bucket)
+
+    def _packed_core(self, params, cache, tokens, token_slot, token_pos,
+                     token_wpos, token_active, cache_len, reset, last_token,
+                     from_last, sample_slot, slot_init, kv_bucket):
         """The whole iteration as one program (DESIGN.md §8): reset reused
         slots' recurrent state, substitute the stream's decode placeholders
         with the device-resident ``last_token`` buffer (§10 — the previous
@@ -322,8 +429,10 @@ class ServeEngine:
         deferrable (``async_depth``).  ``kv_bucket`` is static (DESIGN.md
         §9): attention sweeps only that many cache rows per slot, so the
         program's attention cost tracks the iteration's actual context, not
-        ``max_len``."""
-        cache = self._reset_recurrent(cache, reset)
+        ``max_len``.  Under TP this exact body runs inside ``shard_map``
+        (DESIGN.md §11) with a ``tp_ctx`` active, so the mixer families'
+        reduction points become real collectives."""
+        cache = self._reset_recurrent(cache, reset, slot_init)
         toks = sampling.substitute_last(tokens, last_token, token_slot,
                                         from_last)
         with ops.attn_config(fast=self.attn_fast, stream=self.attn_stream):
@@ -337,7 +446,55 @@ class ServeEngine:
             jnp.where(token_active, token_pos + 1, 0))
         return next_tok, new_cache, new_len, new_last
 
-    def _reset_recurrent(self, cache, reset):
+    def _build_packed_tp_step(self):
+        """jit(shard_map(packed body)) over the 1-D TP mesh (DESIGN.md
+        §11).  The body is ``_packed_core`` unchanged, traced under a
+        ``tp_ctx`` whose nano split comes from the (static) launch length —
+        so the compile cache still keys only on (T bucket, kv bucket), and
+        the nano-batch layout governs how the row-parallel all-reduces are
+        chunked.  Returns a callable with the tp=1 step's signature (the
+        fresh-slot cache is injected as a shard_map operand here; carries
+        ``_cache_size`` for the compile-cache-bound assertions)."""
+        mesh = self._mesh
+        param_specs = tp_lib.param_pspecs_tp(self.cfg)
+        cache_specs = tp_lib.cache_pspecs_tp(self.cfg)
+        rep = P()
+        in_specs = (param_specs, cache_specs) + (rep,) * 10 + (cache_specs,)
+        out_specs = (rep, cache_specs, rep, rep)
+
+        def entry(params, cache, tokens, token_slot, token_pos, token_wpos,
+                  token_active, cache_len, reset, last_token, from_last,
+                  sample_slot, slot_init, kv_bucket):
+            def body(params, cache, tokens, token_slot, token_pos,
+                     token_wpos, token_active, cache_len, reset, last_token,
+                     from_last, sample_slot, slot_init):
+                nano = nano_batch_sizes_for(tokens.shape[1], self.nano).sizes
+                with tp_lib.tp_ctx("model", self.tp, nano):
+                    return self._packed_core(
+                        params, cache, tokens, token_slot, token_pos,
+                        token_wpos, token_active, cache_len, reset,
+                        last_token, from_last, sample_slot, slot_init,
+                        kv_bucket)
+            return shard_map_compat(body, mesh, in_specs, out_specs,
+                                    check=False)(
+                params, cache, tokens, token_slot, token_pos, token_wpos,
+                token_active, cache_len, reset, last_token, from_last,
+                sample_slot, slot_init)
+
+        jitted = jax.jit(entry, donate_argnums=(1, 9), static_argnums=(13,))
+
+        def step(params, cache, tokens, token_slot, token_pos, token_wpos,
+                 token_active, cache_len, reset, last_token, from_last,
+                 sample_slot, kv_bucket):
+            return jitted(params, cache, tokens, token_slot, token_pos,
+                          token_wpos, token_active, cache_len, reset,
+                          last_token, from_last, sample_slot,
+                          self._slot_init, kv_bucket)
+
+        step._cache_size = jitted._cache_size
+        return step
+
+    def _reset_recurrent(self, cache, reset, slot_init):
         """Select fresh recurrent state for slots in ``reset`` (reused slots
         must not leak the previous request's SSM/LSTM state).  Attention
         leaves need no reset — rows at or beyond the new request's written
@@ -355,7 +512,7 @@ class ServeEngine:
                         lambda c, z: jnp.where(
                             reset.reshape((1, -1) + (1,) * (c.ndim - 2)),
                             z.astype(c.dtype), c),
-                        sub, self._slot_init[gi][f"sub{i}"])
+                        sub, slot_init[gi][f"sub{i}"])
             out.append(g)
         return out
 
@@ -514,6 +671,9 @@ class ServeEngine:
         self.stats.kv_bucket_hist[kv_bucket] = \
             self.stats.kv_bucket_hist.get(kv_bucket, 0) + 1
         self.stats.packed_attn_kv_rows += packed.launch_tokens * kv_bucket
+        if self.tp > 1:
+            self.stats.tp_collective_bytes += \
+                packed.launch_tokens * self._tp_iter_bytes
 
         tok_in = jnp.asarray(tokens[None])
         if self.cfg.frontend == "audio":

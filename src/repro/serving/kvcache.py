@@ -38,6 +38,11 @@ class KVStats:
     upload_bytes: int = 0           # cumulative H2D traffic
     aggregated_copies: int = 0
     discarded_requests: int = 0
+    # extend() calls that found no free page: admission overshoot — the
+    # peak estimate promised room that launch-time growth consumed.  Must
+    # stay 0 now that peak_pages counts in-flight tokens (regression
+    # signal; tests/test_kv_accounting.py)
+    extend_failures: int = 0
 
 
 class PagedKVManager:
@@ -70,7 +75,18 @@ class PagedKVManager:
     def peak_pages(self, active: list[Request],
                    candidate: Optional[Request] = None) -> int:
         """Max page demand over the future, assuming one token/iteration and
-        avg-decode completion (requests free their pages when they finish)."""
+        avg-decode completion (requests free their pages when they finish).
+
+        The sweep starts from each request's **launch-side** occupancy, not
+        just committed tokens: with a pipelined engine (DESIGN.md §10) up to
+        ``async_depth`` sampled tokens per request are launched but
+        uncommitted (``Request.inflight``) — they already occupy cache rows
+        that ``extend`` will claim at commit time, and a request decoding
+        past its predicted length would otherwise be under-counted by
+        exactly those rows, letting admission overshoot the pool and
+        ``extend`` fail at commit.  (``prefill_launched`` ahead of
+        ``prefill_done`` is covered by the ``prompt_len`` floor — admission
+        allocates the full prompt up front.)"""
         reqs = list(active) + ([candidate] if candidate is not None else [])
         if not reqs:
             return 0
@@ -78,7 +94,7 @@ class PagedKVManager:
         current = []
         for r in reqs:
             pred = r.predicted_final_len(self.avg_decode_len)
-            cur = max(r.total_tokens, min(r.prompt_len, pred))
+            cur = max(r.total_tokens + r.inflight, min(r.prompt_len, pred))
             remaining.append(max(pred - cur, 0))
             current.append(cur)
         order = sorted(range(len(reqs)), key=lambda i: remaining[i])
@@ -111,6 +127,7 @@ class PagedKVManager:
         need = self.pages_for(new_len)
         extra = need - have
         if extra > len(self.free_pages):
+            self.stats.extend_failures += 1
             return False
         for _ in range(extra):
             self.tables[rid].append(self.free_pages.pop())

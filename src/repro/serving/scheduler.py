@@ -324,6 +324,12 @@ class GlobalBatchScheduler:
             if r.first_token_at is None:
                 r.first_token_at = now
             r.output.append(tok)
+            # extend may fail only if the §4.4 peak estimate under-predicted
+            # (requests decoding far past avg_decode_len) — the launch-aware
+            # sweep (kvcache.peak_pages) removes the pipeline-lag cause, the
+            # rest is inherent to the heuristic; failures are counted
+            # (KVStats.extend_failures), the paper's answer is rare reclaim
+            # (State.DISCARDED), not a hard error on the serving loop
             self.kv.extend(r.rid, r.total_tokens + 1)
             hit_eos = (r.eos_id is not None and tok == r.eos_id)
             if r.pending_eos or len(r.output) >= r.max_new_tokens:

@@ -1,5 +1,7 @@
 # NOTE: never set --xla_force_host_platform_device_count here — smoke tests
 # and benches must see 1 device; multi-device tests spawn subprocesses.
+# (tests/test_tp_engine.py instead SKIPS below 2 devices and runs in CI's
+# tp-host-devices job, where the flag is set in the job environment.)
 import os
 import sys
 

@@ -22,24 +22,12 @@ from repro.models import model
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
-# version-adaptive shard_map: the top-level ``jax.shard_map`` (and its
-# ``check_vma`` kwarg / ``jax.sharding.AxisType``) only exist on newer jax;
-# older releases expose ``jax.experimental.shard_map.shard_map`` with
-# ``check_rep``.  Prepended to every subprocess snippet.
+# version-adaptive shard_map (check_rep/check_vma across jax releases):
+# the ONE implementation lives in repro.distributed.sharding — the engine's
+# TP packed step (DESIGN.md §11) uses it too, and subprocess snippets run
+# with PYTHONPATH=src.  Prepended to every subprocess snippet.
 SMAP_COMPAT = """
-    import inspect
-    import jax
-    try:
-        from jax.experimental.shard_map import shard_map as _smap
-    except ImportError:
-        _smap = jax.shard_map
-    _relax = next(kw for kw in ("check_rep", "check_vma")
-                  if kw in inspect.signature(_smap).parameters)
-
-    def smap(f, mesh, in_specs, out_specs, check=True):
-        kw = {} if check else {_relax: False}
-        return _smap(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                     **kw)
+    from repro.distributed.sharding import shard_map_compat as smap
 """
 
 
@@ -77,6 +65,42 @@ def test_collective_matmuls_multi_device():
         assert float(jnp.abs(h(x, w) - x @ w).max()) < 1e-4
         print("OK")
     """)
+    assert "OK" in out
+
+
+def test_tp_engine_token_equivalence_subprocess():
+    """DESIGN.md §11 smoke under tier-1's single-device run: the shard_map
+    TP packed step must be f32 token-exact against tp=1 (the full
+    per-family suite lives in tests/test_tp_engine.py and runs in CI's
+    tp-host-devices job)."""
+    out = run_subprocess("""
+        import dataclasses
+        import jax, numpy as np
+        from repro.configs import get_config
+        from repro.models import model
+        from repro.serving.engine import ServeEngine
+        from repro.serving.request import Request
+
+        cfg = dataclasses.replace(get_config("tiny-toy"), dtype="float32")
+        params = model.init(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        prompts = [list(map(int, rng.integers(0, cfg.vocab_size,
+                                              size=int(n))))
+                   for n in rng.integers(3, 12, size=4)]
+        outs = {}
+        for tp in (1, 2):
+            eng = ServeEngine(cfg, params, max_slots=2, max_len=32,
+                              discrete_sizes=(16, 8), avg_decode_len=4,
+                              tp=tp)
+            for i, p in enumerate(prompts):
+                eng.submit(Request(rid=i, prompt=list(p), max_new_tokens=3))
+            done = eng.run()
+            outs[tp] = {r.rid: tuple(r.output) for r in done}
+            assert eng.stats.model_dispatches == eng.stats.iterations
+            assert eng.stats.host_syncs == eng.stats.iterations
+        assert outs[1] == outs[2], (outs[1], outs[2])
+        print("OK")
+    """, devices=2)
     assert "OK" in out
 
 

@@ -1,0 +1,200 @@
+"""KV accounting bugfixes (ISSUE 5 satellites).
+
+1. ``kv_bytes_per_token`` derives per-token KV bytes from the *actual*
+   cache leaves: MLA configs cache only the latent ``c_kv + k_rope`` (the
+   old GQA formula over-charged deepseek-style admission ~an order of
+   magnitude) and attention-free SSM/xLSTM models cache nothing per token
+   (the old ``max(n_attn, 1)`` floor charged O(1) recurrent state per-token
+   paging).  ``ServeEngine(kv_budget_bytes=...)`` turns a device byte
+   budget into pages through the corrected rate.
+
+2. ``PagedKVManager.peak_pages`` counts launch-side state: with a
+   pipelined engine (DESIGN.md §10) in-flight sampled tokens occupy cache
+   rows before commit makes them visible, and a committed-only sweep lets
+   admission overshoot the pool so ``extend`` fails at commit time.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, scale_down
+from repro.configs.base import ATTN
+from repro.models import model
+from repro.serving.engine import ServeEngine, kv_bytes_per_token
+from repro.serving.kvcache import PagedKVManager
+from repro.serving.request import Request, State
+
+
+def _old_formula(cfg) -> int:
+    """The pre-fix engine formula (engine.py:223-226 at PR 4)."""
+    hd = cfg.resolved_head_dim
+    n_attn = max(sum(1 for s in cfg.layer_specs() if s.mixer == ATTN), 1)
+    return 2 * cfg.n_kv_heads * hd * 2 * n_attn
+
+
+# ---------------------------------------------------------------------------
+# bytes-per-token derivation
+# ---------------------------------------------------------------------------
+def test_gqa_bytes_match_cache_leaves():
+    cfg = get_config("tiny-toy")          # bf16 GQA: formula was correct
+    n_attn = sum(1 for s in cfg.layer_specs() if s.mixer == ATTN)
+    want = 2 * cfg.n_kv_heads * cfg.resolved_head_dim * 2 * n_attn
+    assert kv_bytes_per_token(cfg) == want == _old_formula(cfg)
+
+
+def test_mla_bytes_are_latent_not_per_head():
+    """The absorbed MLA path caches (kv_lora_rank + qk_rope_dim) per layer;
+    the full deepseek-v2 config was over-charged ~28x (eval_shape only —
+    no allocation)."""
+    cfg = get_config("deepseek-v2-236b")
+    m = cfg.mla
+    n_attn = sum(1 for s in cfg.layer_specs() if s.mixer == ATTN)
+    itemsize = np.dtype(np.float32).itemsize if cfg.dtype == "float32" else 2
+    want = (m.kv_lora_rank + m.qk_rope_dim) * itemsize * n_attn
+    got = kv_bytes_per_token(cfg)
+    assert got == want, (got, want)
+    assert _old_formula(cfg) / got > 10     # "~an order of magnitude"
+    # the smoke config shows the same shape of error
+    smoke = scale_down(cfg)
+    assert _old_formula(smoke) / kv_bytes_per_token(smoke) > 4
+
+
+def test_attention_free_models_charge_zero_per_token():
+    cfg = get_config("xlstm-1.3b")
+    assert kv_bytes_per_token(cfg) == 0
+    assert _old_formula(cfg) > 0            # the old floor charged them
+
+
+def test_kv_budget_admission_capacity_mla():
+    """Same byte budget -> the corrected rate buys several times more pages
+    (admission capacity) for the tiny MLA config (28x on the full one)."""
+    cfg = scale_down(get_config("deepseek-v2-236b"))
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    budget = 1 << 20
+    eng = ServeEngine(cfg, params, max_slots=2, max_len=32, page_size=8,
+                      kv_budget_bytes=budget, avg_decode_len=4)
+    bpt = kv_bytes_per_token(cfg)
+    assert eng.kv.bytes_per_token == bpt
+    assert eng.kv.stats.device_pages_total == budget // (bpt * 8)
+    old_pages = budget // (_old_formula(cfg) * 8)
+    assert eng.kv.stats.device_pages_total > 4 * old_pages
+
+
+def test_kv_budget_attention_free_falls_back_to_slot_capacity():
+    """A byte budget can't bound an attention-free model (0 B/token): the
+    engine falls back to the slot-capacity page pool and still serves."""
+    cfg = dataclasses.replace(scale_down(get_config("xlstm-1.3b")),
+                              dtype="float32")
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_slots=2, max_len=32, page_size=8,
+                      kv_budget_bytes=1024,      # tiny budget, irrelevant
+                      discrete_sizes=(16, 8), avg_decode_len=4)
+    assert eng.kv.bytes_per_token == 0
+    assert eng.kv.stats.device_pages_total == 2 * 32 // 8
+    eng.submit(Request(rid=0, prompt=[1, 2, 3, 4, 5], max_new_tokens=2))
+    done = eng.run()
+    assert len(done) == 1 and len(done[0].output) == 2
+
+
+# ---------------------------------------------------------------------------
+# launch-side peak-memory sweep
+# ---------------------------------------------------------------------------
+def _decoding_request(prompt_len, output_len, inflight, max_new=16):
+    r = Request(rid=0, prompt=list(range(prompt_len)), max_new_tokens=max_new)
+    r.state = State.DECODE
+    r.prefill_done = r.prefill_launched = prompt_len
+    r.output = list(range(output_len))
+    r.inflight = inflight
+    return r
+
+
+def test_peak_pages_counts_inflight_tokens():
+    """A request decoding past its predicted length with k tokens in flight
+    occupies k rows the committed-only sweep missed: admission of a
+    candidate must see them (harvesting off, depth >= 2 is exactly the
+    state that produces inflight > 1)."""
+    kv = PagedKVManager(total_pages=14, page_size=1, bytes_per_token=2,
+                        avg_decode_len=1)
+    r = _decoding_request(prompt_len=4, output_len=4, inflight=3)
+    kv.allocate(r.rid, r.total_tokens)
+    cand = Request(rid=1, prompt=list(range(4)), max_new_tokens=1)
+    # launch view: r occupies 11 rows (8 committed + 3 in flight); cand
+    # peaks at 5 -> 16 > 14: must NOT admit.  The committed-only sweep saw
+    # 8 + 5 = 13 <= 14 and admitted -> extend failed at commit.
+    assert kv.peak_pages([r], cand) > kv.stats.device_pages_total
+    assert not kv.can_admit(cand, [r])
+    r.inflight = 0
+    assert kv.can_admit(cand, [r])          # committed-only view fits
+
+
+class _CommittedOnlyKV(PagedKVManager):
+    """The pre-fix estimator: launch-side state invisible to the sweep."""
+
+    def peak_pages(self, active, candidate=None):
+        stripped = []
+        for r in list(active) + ([candidate] if candidate is not None else []):
+            s = Request(rid=r.rid, prompt=list(r.prompt),
+                        max_new_tokens=r.max_new_tokens)
+            s.output = list(r.output)
+            s.prefill_done = r.prefill_done
+            stripped.append(s)
+        return super().peak_pages(stripped)
+
+
+def test_admission_never_overshoots_under_async_pipeline():
+    """Engine regression, deterministic construction (harvesting off,
+    depth 2): drive plan/step by hand until request A sits 2 sampled tokens
+    past its *committed* state and past its predicted length
+    (``avg_decode_len=1`` understates), then offer candidate B.  The
+    committed-blind estimator admits B — pool 13 vs committed view
+    8 + 4 — and A's in-flight commits later find their pages taken
+    (``extend_failures > 0``).  The launch-side sweep sees A's 10
+    launched rows + B's 4 > 13, defers B until A finishes, and every
+    ``extend`` finds its page.  (Pool 13, not 12: commit reserves one
+    row ahead per decode, so A alone peaks at prompt+max_new+1.)"""
+    cfg = get_config("tiny-toy")
+    params = model.init(cfg, jax.random.PRNGKey(0))
+
+    def run(fixed: bool):
+        eng = ServeEngine(cfg, params, max_slots=2, max_len=32, page_size=1,
+                          total_pages=13, discrete_sizes=(8,),
+                          avg_decode_len=1, async_depth=2,
+                          async_harvest=False)
+        if not fixed:
+            eng.kv = _CommittedOnlyKV(
+                total_pages=13, page_size=1,
+                bytes_per_token=eng.kv.bytes_per_token, avg_decode_len=1)
+            eng.scheduler.kv = eng.kv
+        done = []
+        eng.submit(Request(rid=0, prompt=[1, 2, 3, 4], max_new_tokens=8))
+        # 6 iterations: prefill + 5 decode launches; with depth 2 and
+        # harvesting off, commits lag by exactly 2 -> A has 4 committed
+        # outputs (8 rows) and 2 in flight (rows 8, 9 already written)
+        for _ in range(6):
+            done += eng.step(eng.scheduler.plan())
+        a = eng.scheduler.active[0]
+        assert (a.total_tokens, a.inflight) == (8, 2)
+        eng.submit(Request(rid=1, prompt=[5, 6, 7, 8], max_new_tokens=1))
+        plan = eng.scheduler.plan()             # the admission decision
+        assert plan is not None
+        admitted_b = eng.scheduler.n_active == 2
+        done += eng.step(plan)
+        done += eng.run()
+        assert len(done) == 2
+        assert eng.kv.pages_used <= eng.kv.stats.device_pages_total
+        return admitted_b, eng.kv.stats.extend_failures
+
+    admitted, failures = run(fixed=False)
+    assert admitted and failures > 0, \
+        "scenario no longer reproduces the committed-blind overshoot"
+    admitted, failures = run(fixed=True)
+    assert not admitted and failures == 0
+
+
+def test_extend_failure_counter():
+    kv = PagedKVManager(total_pages=2, page_size=4, bytes_per_token=8,
+                        avg_decode_len=4)
+    assert kv.allocate(0, 8)                # both pages
+    assert not kv.extend(0, 9)
+    assert kv.stats.extend_failures == 1
