@@ -9,6 +9,7 @@
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import numpy as np
@@ -18,6 +19,7 @@ from repro.core import costmodel as cm
 from repro.core.autosearch import (autosearch, sequential_schedule,
                                    throughput_estimate)
 from repro.models import model
+from repro.serving.config import EngineConfig
 from repro.serving.engine import ServeEngine
 from repro.serving.request import Request
 
@@ -78,8 +80,8 @@ ENGINE_MODES = [
 ]
 
 
-def engine_measured(n_requests: int = 16, attn_fast=None,
-                    attn_stream=None) -> list[dict]:
+def engine_measured(n_requests: int = 16,
+                    base: EngineConfig = EngineConfig()) -> list[dict]:
     """Real engine runs, A/B-ing the asynchronously pipelined packed step
     (DESIGN.md §10, ``async_depth=1`` — iteration i+1 is formed and
     launched before iteration i's sampled tokens are retrieved) against
@@ -113,10 +115,18 @@ def engine_measured(n_requests: int = 16, attn_fast=None,
             ("longctx-like", 104, 12, 512, 160, 16, min(n_requests, 10))]:
         per_mode: dict[str, dict] = {}
         for mode, kwargs in ENGINE_MODES:
-            eng = ServeEngine(cfg, params, max_slots=8, max_len=max_len,
-                              discrete_sizes=(64, 32, 16, 8),
-                              avg_decode_len=d, attn_fast=attn_fast,
-                              attn_stream=attn_stream, **kwargs)
+            # mode config on top of the CLI base (EngineConfig satellite:
+            # one shared validated surface; the A/B matrix pins its own
+            # axes, the base supplies attention toggles etc.)
+            mode_kw = dict(step_mode=None, async_depth=None,
+                           prefill_mode="incremental", kv_bucketing=True,
+                           prefix_caching=False, tp=1)
+            mode_kw.update(kwargs)
+            ecfg = dataclasses.replace(
+                base, max_slots=8, max_len=max_len,
+                discrete_sizes=(64, 32, 16, 8), avg_decode_len=float(d),
+                **mode_kw)
+            eng = ServeEngine(cfg, params, ecfg)
             # warmup pass: the *identical* workload -> compiles every
             # (T bucket, kv bucket) program the measured pass will launch
             _submit_workload(eng, name, p, d, n_req, cfg.vocab_size, 0,
@@ -229,9 +239,10 @@ def engine_tp_ab(tp: int, n_requests: int = 12) -> list[dict]:
     rows = []
     raw = {}
     for tp_deg in (1, tp):
-        eng = ServeEngine(cfg, params, max_slots=8, max_len=max_len,
-                          discrete_sizes=(64, 32, 16, 8), avg_decode_len=d,
-                          step_mode="packed", async_depth=1, tp=tp_deg)
+        eng = ServeEngine(cfg, params, EngineConfig(
+            max_slots=8, max_len=max_len, discrete_sizes=(64, 32, 16, 8),
+            avg_decode_len=float(d), step_mode="packed", async_depth=1,
+            tp=tp_deg))
         _submit_workload(eng, name, p, d, n_requests, cfg.vocab_size, 0)
         eng.run()                                  # warmup: compiles all
         warm = dataclasses.replace(eng.stats)
@@ -271,14 +282,102 @@ def engine_tp_ab(tp: int, n_requests: int = 12) -> list[dict]:
     return rows
 
 
-def run(engine_only: bool = False, attn_fast=None,
-        attn_stream=None, tp: int = 1, tp_only: bool = False) -> list[dict]:
+def engine_prefix_ab(n_requests: int = 12,
+                     base: EngineConfig = EngineConfig()) -> list[dict]:
+    """Shared-system-prompt workload (DESIGN.md §12): every request carries
+    the same system prompt plus a short distinct user suffix — the regime
+    cross-request prefix caching targets.  One priming request runs to
+    completion first (sharing materializes across *non-concurrent*
+    admissions: blocks register at first commit), then the measured wave of
+    ``n_requests`` shared-prefix requests runs with ``prefix_caching`` off
+    vs on.  Reported per mode: tokens/s, launched prefill FLOPs per prompt
+    token (cached tokens are never launched, so this drops ~by the shared
+    fraction), mean TTFT, the prefix-hit fraction, and the CoW copy count —
+    while dispatches/iteration and host syncs/iteration must stay at the
+    packed step's 1 + 1."""
+    cfg = get_config("tiny-toy")
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    flops_fwd = 2 * model.active_params(cfg)
+    rng = np.random.default_rng(0)
+    sys_len, sfx_len, d = 48, 8, 8
+    system = [int(t) for t in rng.integers(0, cfg.vocab_size, size=sys_len)]
+    sfx = rng.integers(0, cfg.vocab_size, size=(n_requests + 1, sfx_len))
+    rows, raw = [], {}
+    for pc in (False, True):
+        ecfg = dataclasses.replace(
+            base, max_slots=8, max_len=128, kv_block_size=16,
+            discrete_sizes=(64, 32, 16, 8), avg_decode_len=float(d),
+            step_mode="packed", async_depth=1, prefill_mode="incremental",
+            kv_bucketing=True, kv_buckets=None, prefix_caching=pc, tp=1,
+            total_pages=None, kv_budget_bytes=None)
+        eng = ServeEngine(cfg, params, ecfg)
+        # priming pass: completes one shared-prompt request (commits +
+        # hash-registers its prefix blocks) and compiles every program the
+        # measured wave launches
+        eng.submit(Request(rid=0, prompt=system + [int(t) for t in sfx[0]],
+                           max_new_tokens=d))
+        eng.run()
+        warm = eng.stats.snapshot()
+        warm_kv = eng.kv.stats.snapshot()
+        for i in range(1, n_requests + 1):
+            eng.submit(Request(rid=i,
+                               prompt=system + [int(t) for t in sfx[i]],
+                               max_new_tokens=d,
+                               arrival=time.perf_counter()))
+        done = eng.run()
+        st = eng.stats.snapshot()
+        kvs = eng.kv.stats.snapshot()
+        tokens = st["total_tokens"] - warm["total_tokens"]
+        wall = st["wall_time"] - warm["wall_time"]
+        iters = st["iterations"] - warm["iterations"]
+        launched = (st["prefill_model_tokens"]
+                    - warm["prefill_model_tokens"])
+        prompt_tok = sum(r.prompt_len for r in done)
+        hits = kvs["prefix_hit_tokens"] - warm_kv["prefix_hit_tokens"]
+        ttft = [r.first_token_at - r.arrival for r in done
+                if r.first_token_at is not None]
+        mode = "prefix" if pc else "no-prefix"
+        raw[mode] = {"flops": flops_fwd * launched / max(prompt_tok, 1),
+                     "ttft": float(np.mean(ttft)) if ttft else 0.0,
+                     "tok_s": tokens / max(wall, 1e-9)}
+        rows.append({
+            "bench": "offline_throughput_engine",
+            "case": f"tiny-toy/shared-sysprompt/{mode}",
+            "finished": len(done),
+            "tokens": tokens,
+            "tok_s_cpu": round(raw[mode]["tok_s"], 1),
+            "iters": iters,
+            "dispatches_per_iter": round(
+                (st["model_dispatches"] - warm["model_dispatches"])
+                / max(iters, 1), 3),
+            "host_syncs_per_iter": round(
+                (st["host_syncs"] - warm["host_syncs"]) / max(iters, 1), 3),
+            "prefill_expansion": round(
+                launched / max(st["prefill_tokens"]
+                               - warm["prefill_tokens"], 1), 3),
+            "prefill_flops_per_prompt_tok": round(raw[mode]["flops"]),
+            "ttft_mean_ms": round(raw[mode]["ttft"] * 1e3, 1),
+            "prefix_hit_frac": round(hits / max(prompt_tok, 1), 3),
+            "cow_copies": kvs["cow_copies"] - warm_kv["cow_copies"],
+            "evicted_blocks": (kvs["evicted_blocks"]
+                               - warm_kv["evicted_blocks"]),
+        })
+    rows[-1]["prefill_flops_ratio_vs_no_prefix"] = round(
+        raw["prefix"]["flops"] / max(raw["no-prefix"]["flops"], 1e-9), 3)
+    rows[-1]["ttft_ratio_vs_no_prefix"] = round(
+        raw["prefix"]["ttft"] / max(raw["no-prefix"]["ttft"], 1e-9), 3)
+    return rows
+
+
+def run(engine_only: bool = False, base: EngineConfig = EngineConfig(),
+        tp: int = 1, tp_only: bool = False) -> list[dict]:
     if tp_only:
         return engine_tp_ab(tp)
     out = [] if engine_only else (
         modeled("llama2-70b", cm.A100_80G, 8)
         + modeled("qwen3-8b", cm.TPU_V5E, 16))
-    out += engine_measured(attn_fast=attn_fast, attn_stream=attn_stream)
+    out += engine_measured(base=base)
+    out += engine_prefix_ab(base=base)
     if tp > 1:
         out += engine_tp_ab(tp)
     return out
@@ -293,23 +392,15 @@ def main(argv=None) -> None:
                     help="skip the modeled-hardware rows (CI smoke)")
     ap.add_argument("--json", default=None,
                     help="also write the rows as a JSON artifact")
-    ap.add_argument("--tp", type=int, default=1,
-                    help="also A/B the packed step at tp=1 vs tp=N "
-                         "(DESIGN.md §11; forces N host-platform devices — "
-                         "this changes the process's device split, so CI "
-                         "runs the tp axis as a separate --tp-only "
-                         "invocation to keep the baseline rows' "
-                         "environment unchanged)")
     ap.add_argument("--tp-only", action="store_true",
-                    help="run only the tp=1-vs-tp=N A/B rows")
-    ap.add_argument("--attn-fast", action=argparse.BooleanOptionalAction,
-                    default=None,
-                    help="no-upcast attention refs (§Perf HC3); default: "
-                         "REPRO_ATTN_FAST env")
-    ap.add_argument("--attn-stream", action=argparse.BooleanOptionalAction,
-                    default=None,
-                    help="streamed long-seq flash ref; default: "
-                         "REPRO_ATTN_STREAM env")
+                    help="run only the tp=1-vs-tp=N A/B rows (DESIGN.md "
+                         "§11; --tp forces N host-platform devices — CI "
+                         "runs the tp axis as a separate invocation to keep "
+                         "the baseline rows' environment unchanged)")
+    # engine knobs are defined ONCE on EngineConfig (--tp, --attn-fast,
+    # --attn-stream, ... — the same surface as launch/serve.py); the mode
+    # matrices pin their own A/B axes on top of this base
+    EngineConfig.add_args(ap)
     args = ap.parse_args(argv)
     if args.tp_only and args.tp <= 1:
         ap.error("--tp-only needs --tp N with N > 1")
@@ -318,8 +409,8 @@ def main(argv=None) -> None:
         # the backend, so the host-device flag still takes effect here
         from repro.launch.serve import ensure_host_devices
         ensure_host_devices(args.tp)
-    rows = run(engine_only=args.engine_only, attn_fast=args.attn_fast,
-               attn_stream=args.attn_stream, tp=args.tp,
+    rows = run(engine_only=args.engine_only,
+               base=EngineConfig.from_args(args), tp=args.tp,
                tp_only=args.tp_only)
     if args.json:
         with open(args.json, "w") as f:
@@ -330,6 +421,20 @@ def main(argv=None) -> None:
                   f"nano={r['nanoflow_tok_s_dev']} seq={r['sequential_tok_s_dev']} "
                   f"opt={r['optimal_tok_s_dev']} ({r['pct_optimal']}% of optimal, "
                   f"{r['speedup']}x)")
+        elif "prefix_hit_frac" in r:
+            extra = ""
+            if "prefill_flops_ratio_vs_no_prefix" in r:
+                extra = (f" [{r['prefill_flops_ratio_vs_no_prefix']}x "
+                         f"prefill FLOPs, {r['ttft_ratio_vs_no_prefix']}x "
+                         f"TTFT vs no-prefix]")
+            print(f"fig10/{r['case']},0.0,{r['tok_s_cpu']} tok/s CPU "
+                  f"({r['tokens']} tokens, {r['iters']} iters, "
+                  f"{r['dispatches_per_iter']} disp/it, "
+                  f"{r['host_syncs_per_iter']} sync/it, "
+                  f"{r['prefill_flops_per_prompt_tok']} prefill "
+                  f"FLOPs/prompt tok, ttft {r['ttft_mean_ms']} ms, "
+                  f"prefix hits {r['prefix_hit_frac']}, "
+                  f"{r['cow_copies']} CoW){extra}")
         else:
             extra = ""
             if "speedup_vs_legacy" in r:

@@ -9,6 +9,7 @@ from repro.configs import get_config
 from repro.core import costmodel as cm
 from repro.core.autosearch import autosearch, throughput_estimate
 from repro.models import model
+from repro.serving.config import EngineConfig
 from repro.serving.engine import ServeEngine
 from repro.serving.request import Request
 
@@ -37,8 +38,8 @@ print(f"autosearch schedule: nano_kqv={sched.nano_kqv} "
 print(f"critical path: {' -> '.join(sched.critical_path)}")
 
 # 4. Serve a batch of requests end-to-end (continuous batching + paged KV).
-eng = ServeEngine(cfg, params, max_slots=4, max_len=64,
-                  discrete_sizes=(32, 16, 8))
+eng = ServeEngine(cfg, params, EngineConfig(max_slots=4, max_len=64,
+                                               discrete_sizes=(32, 16, 8)))
 rng = np.random.default_rng(0)
 for i in range(6):
     eng.submit(Request(rid=i,

@@ -11,6 +11,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import model
+from repro.serving.config import EngineConfig
 from repro.serving.engine import ServeEngine
 from repro.serving.request import Request
 
@@ -24,8 +25,9 @@ def main() -> None:
 
     cfg = get_config(args.arch)
     params = model.init(cfg, jax.random.PRNGKey(args.seed))
-    eng = ServeEngine(cfg, params, max_slots=8, max_len=128,
-                      discrete_sizes=(64, 32, 16, 8), avg_decode_len=10)
+    eng = ServeEngine(cfg, params, EngineConfig(
+        max_slots=8, max_len=128, discrete_sizes=(64, 32, 16, 8),
+        avg_decode_len=10))
 
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):

@@ -139,6 +139,7 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, logit_scale=None,
 
 def packed_attention(q, k_cache, v_cache, token_slot, lengths, *,
                      logit_scale=None, kv_bucket: Optional[int] = None,
+                     block_tables=None,
                      impl: Optional[str] = None, fast: Optional[bool] = None):
     """Segment-masked attention over a token-packed stream (DESIGN.md §8):
     token t attends rows [0, lengths[t]) of slot ``token_slot[t]``'s cache.
@@ -147,16 +148,23 @@ def packed_attention(q, k_cache, v_cache, token_slot, lengths, *,
     the iteration's KV-length bucket so work scales with actual context, not
     ``max_len`` (DESIGN.md §9).  The Pallas kernel gathers each token's slot
     rows block-wise via scalar-prefetch indexing and handles the absorbed-MLA
-    ``d_v != d_qk`` case natively, so no silent ref downgrade here."""
+    ``d_v != d_qk`` case natively, so no silent ref downgrade here.
+
+    ``block_tables`` (optional, DESIGN.md §12): block-table mode — the
+    caches are physical block storage and every gather is routed through
+    the per-slot table (index-map dereference in the Pallas kernel, dense
+    per-slot gather in the refs)."""
     impl = _resolve(impl)
     if impl == "ref":
         fn = _ref.packed_attention_fast if _attn_fast(fast) \
             else _ref.packed_attention_ref
         return fn(q, k_cache, v_cache, token_slot, lengths,
-                  logit_scale=logit_scale, kv_bucket=kv_bucket)
+                  logit_scale=logit_scale, kv_bucket=kv_bucket,
+                  block_tables=block_tables)
     from repro.kernels import packed_attention as _pa
     return _pa.packed_attention(q, k_cache, v_cache, token_slot, lengths,
                                 logit_scale=logit_scale, kv_bucket=kv_bucket,
+                                block_tables=block_tables,
                                 interpret=(impl == "interpret"))
 
 

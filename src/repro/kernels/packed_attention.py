@@ -74,12 +74,21 @@ def _kernel(slot_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
         o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
 
 
+def _kernel_block(bt_ref, slot_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, scale: float, block_k: int):
+    # block-table mode: the physical-block dereference happened in the index
+    # map (bt[slot[t] * nb_cols + sb]); the flash math is identical
+    _kernel(slot_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+            acc_ref, scale=scale, block_k=block_k)
+
+
 @functools.partial(jax.jit, static_argnames=("logit_scale", "kv_bucket",
                                              "block_k", "interpret"))
 def packed_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      token_slot: jax.Array, lengths: jax.Array, *,
                      logit_scale: Optional[float] = None,
                      kv_bucket: Optional[int] = None,
+                     block_tables: Optional[jax.Array] = None,
                      block_k: int = DEFAULT_BLOCK_K,
                      interpret: bool = False) -> jax.Array:
     """q: (T, H, Dqk) packed queries; k_cache: (N_slots, S, KV, Dqk);
@@ -89,10 +98,25 @@ def packed_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     ``kv_bucket`` (static): the caller guarantees ``max(lengths) <=
     kv_bucket``; only the first ``kv_bucket`` cache rows are swept.
     Returns (T, H, Dv).
+
+    ``block_tables`` (optional, (N_slots, S // block_size) int32,
+    DESIGN.md §12): block-table mode — the caches are *physical block
+    storage* (flat row space N·S carved into fixed-size blocks) and the
+    scalar-prefetch gather goes through the table: grid step
+    ``(t, kv, sb)`` DMAs physical block ``bt[slot[t], sb]`` instead of slot
+    row-block ``sb``.  One extra prefetched operand, same grid, same flash
+    math — the compile-cache bound (|T buckets| × |kv buckets|) is
+    unchanged because the table is a traced operand of static shape.
     """
     t, h, d = q.shape
     n, s, kvh, _ = k_cache.shape
     dv = v_cache.shape[-1]
+    if block_tables is not None:
+        return _packed_attention_block(q, k_cache, v_cache, token_slot,
+                                       lengths, block_tables,
+                                       logit_scale=logit_scale,
+                                       kv_bucket=kv_bucket,
+                                       interpret=interpret)
     if kv_bucket is not None and kv_bucket < s:
         k_cache = jax.lax.slice_in_dim(k_cache, 0, kv_bucket, axis=1)
         v_cache = jax.lax.slice_in_dim(v_cache, 0, kv_bucket, axis=1)
@@ -136,4 +160,60 @@ def packed_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
         out_shape=jax.ShapeDtypeStruct((t, kvh, group, dv), q.dtype),
         interpret=interpret,
     )(token_slot, lengths, qf, kf, vf)
+    return out.reshape(t, h, dv)
+
+
+def _packed_attention_block(q, k_cache, v_cache, token_slot, lengths,
+                            block_tables, *, logit_scale, kv_bucket,
+                            interpret):
+    """Block-table gather mode (DESIGN.md §12).  The KV grid dimension
+    sweeps *logical* blocks 0..kv_bucket/bs; the index map dereferences the
+    flattened table so each step's DMA lands on the request's physical
+    block.  ``block_k`` is pinned to the block size — a DMA can't span two
+    physical blocks that are not adjacent in memory."""
+    t, h, d = q.shape
+    n, s, kvh, _ = k_cache.shape
+    dv = v_cache.shape[-1]
+    nb_cols = block_tables.shape[1]
+    bs = s // nb_cols
+    sweep = s if kv_bucket is None or kv_bucket > s else kv_bucket
+    assert sweep % bs == 0, (sweep, bs)
+    group = h // kvh
+    scale = logit_scale if logit_scale is not None else d ** -0.5
+
+    qf = q.reshape(t, kvh, group, d)
+    # physical block storage, KV-heads major so one (block, head) tile DMAs
+    # contiguously: (N*S/bs, bs, KV, D) -> (NB, KV, bs, D)
+    kf = k_cache.reshape(n * nb_cols, bs, kvh, d).transpose(0, 2, 1, 3)
+    vf = v_cache.reshape(n * nb_cols, bs, kvh, dv).transpose(0, 2, 1, 3)
+    bt = block_tables.reshape(-1).astype(jnp.int32)
+
+    grid = (t, kvh, sweep // bs)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,                # block_tables, token_slot, lengths
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, group, d),
+                         lambda ti, kv, sb, bt, slot, ln: (ti, kv, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda ti, kv, sb, bt, slot, ln:
+                         (bt[slot[ti] * nb_cols + sb], kv, 0, 0)),
+            pl.BlockSpec((1, 1, bs, dv),
+                         lambda ti, kv, sb, bt, slot, ln:
+                         (bt[slot[ti] * nb_cols + sb], kv, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, dv),
+                               lambda ti, kv, sb, bt, slot, ln: (ti, kv, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group,), jnp.float32),      # m (running max)
+            pltpu.VMEM((group,), jnp.float32),      # l (running denom)
+            pltpu.VMEM((group, dv), jnp.float32),   # acc
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel_block, scale=scale, block_k=bs),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, kvh, group, dv), q.dtype),
+        interpret=interpret,
+    )(bt, token_slot, lengths, qf, kf, vf)
     return out.reshape(t, h, dv)

@@ -94,10 +94,33 @@ def _kv_bucket_view(k_cache: jax.Array, v_cache: jax.Array,
     return k_cache, v_cache
 
 
+def _block_gather_view(cache: jax.Array, block_tables: jax.Array,
+                       kv_bucket: Optional[int]) -> jax.Array:
+    """Per-slot contiguous view of a block-table cache (DESIGN.md §12).
+
+    ``cache``: (N_slots, S, ...) physical storage whose *flat* row space
+    (N·S rows) is carved into fixed-size blocks; ``block_tables``:
+    (N_slots, S // block_size) int32 — physical block id backing each
+    slot's logical block.  Gathers the first ``kv_bucket`` logical rows of
+    every slot back into (N_slots, kv_bucket, ...), after which the dense
+    packed-attention math is unchanged (the Pallas kernel instead gathers
+    block-wise at the index-map level and never materializes this view)."""
+    n, s = cache.shape[0], cache.shape[1]
+    nb_cols = block_tables.shape[1]
+    bs = s // nb_cols
+    sweep = s if kv_bucket is None or kv_bucket > s else kv_bucket
+    nbk = sweep // bs
+    flat = cache.reshape((n * nb_cols, bs) + cache.shape[2:])
+    view = flat[block_tables[:, :nbk]]              # (N, nbk, bs, ...)
+    return view.reshape((n, nbk * bs) + cache.shape[2:])
+
+
 def packed_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                          token_slot: jax.Array, lengths: jax.Array, *,
                          logit_scale: Optional[float] = None,
-                         kv_bucket: Optional[int] = None) -> jax.Array:
+                         kv_bucket: Optional[int] = None,
+                         block_tables: Optional[jax.Array] = None
+                         ) -> jax.Array:
     """Segment-masked attention for the token-packed dense-batch step
     (DESIGN.md §8): every token of a packed ``(T,)`` stream attends its own
     slot's cache rows ``[0, lengths[t])`` and nothing else.
@@ -120,8 +143,16 @@ def packed_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     small, so the extra FLOPs are noise next to the dense GEMMs).  The
     Pallas kernel (kernels/packed_attention.py) gathers block-wise instead,
     through the same call sites.
+
+    ``block_tables`` (optional, DESIGN.md §12): block-table mode — the
+    caches are physical block storage and each slot's logical rows are
+    gathered through its table before the dense sweep.
     """
-    k_cache, v_cache = _kv_bucket_view(k_cache, v_cache, kv_bucket)
+    if block_tables is not None:
+        k_cache = _block_gather_view(k_cache, block_tables, kv_bucket)
+        v_cache = _block_gather_view(v_cache, block_tables, kv_bucket)
+    else:
+        k_cache, v_cache = _kv_bucket_view(k_cache, v_cache, kv_bucket)
     t, h, d = q.shape
     n, s, kv, _ = k_cache.shape
     dv = v_cache.shape[-1]
@@ -145,10 +176,16 @@ def packed_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 def packed_attention_fast(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                           token_slot: jax.Array, lengths: jax.Array, *,
                           logit_scale: Optional[float] = None,
-                          kv_bucket: Optional[int] = None) -> jax.Array:
+                          kv_bucket: Optional[int] = None,
+                          block_tables: Optional[jax.Array] = None
+                          ) -> jax.Array:
     """No-upcast variant of ``packed_attention_ref`` (§Perf HC3): same
     math, bf16 einsum operands with f32 in-register accumulation."""
-    k_cache, v_cache = _kv_bucket_view(k_cache, v_cache, kv_bucket)
+    if block_tables is not None:
+        k_cache = _block_gather_view(k_cache, block_tables, kv_bucket)
+        v_cache = _block_gather_view(v_cache, block_tables, kv_bucket)
+    else:
+        k_cache, v_cache = _kv_bucket_view(k_cache, v_cache, kv_bucket)
     t, h, d = q.shape
     n, s, kv, _ = k_cache.shape
     dv = v_cache.shape[-1]

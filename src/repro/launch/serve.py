@@ -14,6 +14,7 @@ import numpy as np
 
 from repro.configs import get_config, scale_down
 from repro.models import model as model_lib
+from repro.serving.config import EngineConfig
 from repro.serving.engine import ServeEngine
 from repro.serving.request import Request
 
@@ -50,33 +51,9 @@ def main() -> None:
     ap.add_argument("--arch", default="tiny-toy")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--slots", type=int, default=8)
-    ap.add_argument("--max-len", type=int, default=256)
-    ap.add_argument("--step-mode", default="packed",
-                    choices=["packed", "legacy"],
-                    help="packed = one fused dispatch/iteration (DESIGN.md §8)")
-    ap.add_argument("--async-depth", type=int, default=None,
-                    help="iterations kept in flight before syncing their "
-                         "sampled tokens (DESIGN.md §10); 0 = eager "
-                         "lock-step (bit-identical to pre-§10 behaviour); "
-                         "default: 1 for the packed step, 0 for legacy")
-    ap.add_argument("--tp", type=int, default=1,
-                    help="tensor-parallel degree (DESIGN.md §11): the "
-                         "packed step runs as one shard_map program over a "
-                         "1-D model mesh; on CPU the devices come from "
-                         "--xla_force_host_platform_device_count (set "
-                         "automatically when launching this driver)")
-    ap.add_argument("--no-kv-bucketing", action="store_true",
-                    help="sweep max_len every iteration instead of the "
-                         "KV-length bucket (DESIGN.md §9; A/B baseline)")
-    ap.add_argument("--attn-fast", action=argparse.BooleanOptionalAction,
-                    default=None,
-                    help="no-upcast attention refs (§Perf HC3); default: "
-                         "REPRO_ATTN_FAST env")
-    ap.add_argument("--attn-stream", action=argparse.BooleanOptionalAction,
-                    default=None,
-                    help="streamed long-seq flash ref; default: "
-                         "REPRO_ATTN_STREAM env")
+    # engine knobs are defined ONCE on EngineConfig and shared with
+    # benchmarks/offline_throughput.py
+    EngineConfig.add_args(ap)
     ap.add_argument("--online", action="store_true")
     ap.add_argument("--rate", type=float, default=4.0, help="req/s (poisson)")
     ap.add_argument("--duration", type=float, default=10.0)
@@ -88,11 +65,7 @@ def main() -> None:
     if args.smoke:
         cfg = scale_down(cfg)
     params = model_lib.init(cfg, jax.random.PRNGKey(args.seed))
-    eng = ServeEngine(cfg, params, max_slots=args.slots, max_len=args.max_len,
-                      step_mode=args.step_mode, async_depth=args.async_depth,
-                      tp=args.tp,
-                      kv_bucketing=not args.no_kv_bucketing,
-                      attn_fast=args.attn_fast, attn_stream=args.attn_stream)
+    eng = ServeEngine(cfg, params, EngineConfig.from_args(args, seed=args.seed))
     reqs = make_requests(args.requests, cfg.vocab_size, args.seed)
 
     if not args.online:
@@ -129,34 +102,48 @@ def main() -> None:
         # loop must account it itself or throughput/wall prints read 0
         eng.stats.wall_time += time.perf_counter() - t0
 
-    st = eng.stats
-    print(f"finished {len(done)}/{len(reqs)} requests in {st.iterations} iters")
-    print(f"tokens: prefill {st.prefill_tokens} decode {st.decode_tokens} "
-          f"total {st.total_tokens}")
-    print(f"throughput {st.throughput:.1f} tok/s (CPU ref-path proxy)")
-    print(f"step={eng.step_mode}: {st.dispatches_per_iter:.2f} dispatches/iter, "
-          f"{st.syncs_per_iter:.2f} host syncs/iter, "
-          f"{st.packed_pad_tokens} pad tokens")
+    # every figure below comes off the common snapshot() schema shared with
+    # the benchmark JSON and the tests (EngineStats / KVStats satellites)
+    st = eng.stats.snapshot()
+    kv = eng.kv.stats.snapshot()
+    print(f"finished {len(done)}/{len(reqs)} requests in "
+          f"{st['iterations']} iters")
+    print(f"tokens: prefill {st['prefill_tokens']} decode "
+          f"{st['decode_tokens']} total {st['total_tokens']}")
+    print(f"throughput {st['throughput']:.1f} tok/s (CPU ref-path proxy)")
+    print(f"step={eng.step_mode}: {st['dispatches_per_iter']:.2f} "
+          f"dispatches/iter, {st['syncs_per_iter']:.2f} host syncs/iter, "
+          f"{st['packed_pad_tokens']} pad tokens")
     print(f"async depth {eng.async_depth}: "
-          f"{st.blocking_syncs}/{st.host_syncs} blocking syncs "
-          f"({st.blocking_syncs_per_iter:.2f}/iter), "
-          f"blocked {st.blocked_sync_time*1e3:.0f} ms, "
-          f"host {st.host_time*1e3:.0f} ms, "
-          f"dispatch {st.dispatch_time*1e3:.0f} ms "
-          f"(wall {st.wall_time*1e3:.0f} ms), "
+          f"{st['blocking_syncs']}/{st['host_syncs']} blocking syncs "
+          f"({st['blocking_syncs_per_iter']:.2f}/iter), "
+          f"blocked {st['blocked_sync_time']*1e3:.0f} ms, "
+          f"host {st['host_time']*1e3:.0f} ms, "
+          f"dispatch {st['dispatch_time']*1e3:.0f} ms "
+          f"(wall {st['wall_time']*1e3:.0f} ms), "
           f"{eng.scheduler.dropped_tokens} overshoot tokens dropped")
     if eng.tp > 1:
-        print(f"tp={eng.tp}: ~{st.tp_collective_bytes_per_iter / 1e3:.1f} KB "
+        print(f"tp={eng.tp}: "
+              f"~{st['tp_collective_bytes_per_iter'] / 1e3:.1f} KB "
               f"modeled collective traffic/iter "
-              f"({st.tp_collective_bytes / 1e6:.2f} MB total)")
-    print(f"dense batch histogram: {dict(sorted(st.dense_batch_hist.items()))}")
-    if st.kv_bucket_hist:
-        swept = sum(b * n for b, n in st.kv_bucket_hist.items())
-        dense = args.max_len * sum(st.kv_bucket_hist.values())
-        print(f"kv bucket histogram: {dict(sorted(st.kv_bucket_hist.items()))}"
+              f"({st['tp_collective_bytes'] / 1e6:.2f} MB total)")
+    print("dense batch histogram: "
+          f"{dict(sorted(st['dense_batch_hist'].items()))}")
+    if st["kv_bucket_hist"]:
+        swept = sum(b * n for b, n in st["kv_bucket_hist"].items())
+        dense = args.max_len * sum(st["kv_bucket_hist"].values())
+        print(f"kv bucket histogram: "
+              f"{dict(sorted(st['kv_bucket_hist'].items()))}"
               f" (attention sweep {swept / max(dense, 1):.2f}x of max_len)")
-    print(f"kv offload: {eng.kv.stats.offload_bytes/1e6:.2f} MB aggregated in "
-          f"{eng.kv.stats.aggregated_copies} copies")
+    if eng.prefix_caching:
+        total_prompt = sum(r.prompt_len for r in done)
+        print(f"prefix caching: {kv['prefix_hit_tokens']} prompt tokens "
+              f"served from shared blocks "
+              f"({kv['prefix_hit_tokens'] / max(total_prompt, 1):.0%} of "
+              f"prompt), {kv['cow_copies']} CoW block copies, "
+              f"{kv['evicted_blocks']} cached blocks evicted")
+    print(f"kv offload: {kv['offload_bytes']/1e6:.2f} MB aggregated in "
+          f"{kv['aggregated_copies']} copies")
     lat = [(r.finished_at or 0) - r.arrival for r in done if r.finished_at]
     if lat and args.online:
         norm = [l / max(len(r.output), 1) for l, r in zip(lat, done)]

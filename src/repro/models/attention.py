@@ -172,9 +172,37 @@ def gqa_prefill_chunk(cfg: ModelConfig, p: dict, x: jax.Array,
     return y, {"k": k_cache, "v": v_cache}
 
 
+def _flat_scatter(cache: jax.Array, new: jax.Array,
+                  token_dst: jax.Array) -> jax.Array:
+    """Block-table scatter (DESIGN.md §12): write each token's row at its
+    *physical* flat row id (block_id · block_size + offset), computed on the
+    host from the request's block table.  Padding rows carry ``N·S`` (out of
+    bounds → dropped).  The leaf keeps its (N, S, ...) shape."""
+    n, s = cache.shape[:2]
+    flat = cache.reshape((n * s,) + cache.shape[2:])
+    flat = flat.at[token_dst].set(new.astype(cache.dtype), mode="drop")
+    return flat.reshape(cache.shape)
+
+
+def _block_view(cache: jax.Array, block_tables: jax.Array,
+                kv_bucket: Optional[int]) -> jax.Array:
+    """Gather a block-table cache back into per-slot contiguous logical
+    rows, (N, kv_bucket, ...) — the dense-read analogue of the Pallas
+    kernel's index-map dereference (used by the MLA latent path, where the
+    absorbed concat needs a materialized view anyway)."""
+    n, s = cache.shape[:2]
+    nb_cols = block_tables.shape[1]
+    bs = s // nb_cols
+    sweep = s if kv_bucket is None or kv_bucket > s else kv_bucket
+    flat = cache.reshape((n * nb_cols, bs) + cache.shape[2:])
+    view = flat[block_tables[:, :sweep // bs]]
+    return view.reshape((n, sweep) + cache.shape[2:])
+
+
 def gqa_packed(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
                cache: dict, token_slot: jax.Array, token_wpos: jax.Array,
-               kv_bucket: Optional[int] = None):
+               kv_bucket: Optional[int] = None, token_dst=None,
+               block_tables=None):
     """Token-packed dense-batch step (DESIGN.md §8).  x: (1, T, D) — the
     iteration's decode tokens and *all* prefill-chunk tokens packed into one
     stream; positions: (1, T) absolute position of each token in its own
@@ -193,16 +221,27 @@ def gqa_packed(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
     Under tensor parallelism (DESIGN.md §11) the projections and the slot
     cache are sharded along (kv-)heads, attention is per-head local, and
     only the output projection reduces across shards
-    (``tp.out_project`` — a nano-batch-chunked ring all-reduce)."""
+    (``tp.out_project`` — a nano-batch-chunked ring all-reduce).
+
+    Block-table mode (DESIGN.md §12, ``token_dst``/``block_tables`` set):
+    the same leaves are treated as physical block storage — K/V scatter at
+    flat row ``token_dst[t]`` and attention gathers through the per-slot
+    table, so requests can share immutable prefix blocks.  TP-safe: both
+    reshapes fold the unsharded (slot, seq) axes only."""
     q, k_new, v_new = _qkv(cfg, p, x, positions)
-    k_cache = cache["k"].at[token_slot, token_wpos].set(
-        k_new[0].astype(cache["k"].dtype), mode="drop")
-    v_cache = cache["v"].at[token_slot, token_wpos].set(
-        v_new[0].astype(cache["v"].dtype), mode="drop")
+    if block_tables is not None:
+        k_cache = _flat_scatter(cache["k"], k_new[0], token_dst)
+        v_cache = _flat_scatter(cache["v"], v_new[0], token_dst)
+    else:
+        k_cache = cache["k"].at[token_slot, token_wpos].set(
+            k_new[0].astype(cache["k"].dtype), mode="drop")
+        v_cache = cache["v"].at[token_slot, token_wpos].set(
+            v_new[0].astype(cache["v"].dtype), mode="drop")
     k_cache = shard(k_cache, "batch", "kv_seq", "act_kv_heads", None)
     v_cache = shard(v_cache, "batch", "kv_seq", "act_kv_heads", None)
     out = ops.packed_attention(q[0], k_cache, v_cache, token_slot,
-                               positions[0] + 1, kv_bucket=kv_bucket)
+                               positions[0] + 1, kv_bucket=kv_bucket,
+                               block_tables=block_tables)
     y = tp.out_project(out, p["wo"])[None]
     y = shard(y, "batch", "act_seq", "embed")
     return y, {"k": k_cache, "v": v_cache}
@@ -379,7 +418,8 @@ def mla_prefill_chunk(cfg: ModelConfig, p: dict, x: jax.Array,
 
 def mla_packed(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
                cache: dict, token_slot: jax.Array, token_wpos: jax.Array,
-               kv_bucket: Optional[int] = None):
+               kv_bucket: Optional[int] = None, token_dst=None,
+               block_tables=None):
     """Token-packed step for MLA (DESIGN.md §8): scatter each token's
     latents at ``(slot, wpos)``, attend absorbed queries over the slot's
     latent cache with the segment/length mask.  Same absorbed association
@@ -393,19 +433,32 @@ def mla_packed(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
     Under tensor parallelism (DESIGN.md §11) the latent path — ``c_kv`` /
     ``k_rope`` and their cache — is replicated (it is one shared kv
     "head"); the absorbed per-head projections are sharded along heads and
-    the output projection reduces across shards (``tp.out_project``)."""
+    the output projection reduces across shards (``tp.out_project``).
+
+    Block-table mode (DESIGN.md §12): latents scatter at their flat
+    physical rows and the bucket view is a per-slot *gather* through the
+    block table instead of a slice — the absorbed concat then proceeds on
+    the logical view, so the dense latent attention (one shared kv "head")
+    needs no kernel-side table."""
     m = cfg.mla
     q_abs = _mla_q_absorbed(cfg, p, x, positions)        # (1,T,H,rank+rope)
     c_new, r_new = _mla_latent(cfg, p, x, positions)
-    ckv = cache["c_kv"].at[token_slot, token_wpos].set(
-        c_new[0].astype(cache["c_kv"].dtype), mode="drop")
-    krp = cache["k_rope"].at[token_slot, token_wpos].set(
-        r_new[0].astype(cache["k_rope"].dtype), mode="drop")
-    ckv = shard(ckv, "batch", "kv_seq", None)
-    ckv_v, krp_v = ckv, krp
-    if kv_bucket is not None and kv_bucket < ckv.shape[1]:
-        ckv_v = jax.lax.slice_in_dim(ckv, 0, kv_bucket, axis=1)
-        krp_v = jax.lax.slice_in_dim(krp, 0, kv_bucket, axis=1)
+    if block_tables is not None:
+        ckv = _flat_scatter(cache["c_kv"], c_new[0], token_dst)
+        krp = _flat_scatter(cache["k_rope"], r_new[0], token_dst)
+        ckv = shard(ckv, "batch", "kv_seq", None)
+        ckv_v = _block_view(ckv, block_tables, kv_bucket)
+        krp_v = _block_view(krp, block_tables, kv_bucket)
+    else:
+        ckv = cache["c_kv"].at[token_slot, token_wpos].set(
+            c_new[0].astype(cache["c_kv"].dtype), mode="drop")
+        krp = cache["k_rope"].at[token_slot, token_wpos].set(
+            r_new[0].astype(cache["k_rope"].dtype), mode="drop")
+        ckv = shard(ckv, "batch", "kv_seq", None)
+        ckv_v, krp_v = ckv, krp
+        if kv_bucket is not None and kv_bucket < ckv.shape[1]:
+            ckv_v = jax.lax.slice_in_dim(ckv, 0, kv_bucket, axis=1)
+            krp_v = jax.lax.slice_in_dim(krp, 0, kv_bucket, axis=1)
     k_abs = jnp.concatenate([ckv_v, krp_v], axis=-1)[:, :, None, :]
     v_lat = ckv_v[:, :, None, :]
     scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5

@@ -143,20 +143,24 @@ def block_chunk(cfg: ModelConfig, spec: LayerSpec, p: dict, x: jax.Array,
 def block_packed(cfg: ModelConfig, spec: LayerSpec, p: dict, x: jax.Array,
                  positions: jax.Array, cache: dict, token_slot: jax.Array,
                  token_wpos: jax.Array, token_active: jax.Array,
-                 kv_bucket: Optional[int] = None):
+                 kv_bucket: Optional[int] = None, token_dst=None,
+                 block_tables=None):
     """Token-packed dense-batch step (DESIGN.md §8): one (1, T) stream
     holding the iteration's decode tokens and all prefill-chunk tokens with
     per-token (slot, position) metadata, run against the *whole* slot cache.
     Attention scatters K/V at (slot, wpos), applies the segment mask, and
     reads only ``kv_bucket`` cache rows per slot (KV-length bucketing,
     DESIGN.md §9; ``None`` = full ``max_len``); recurrent mixers advance
-    per-slot state with active-masking.
+    per-slot state with active-masking.  ``token_dst``/``block_tables``
+    switch attention to block-table mode (DESIGN.md §12; attention-only —
+    the engine rejects prefix caching for models with recurrent mixers).
     Returns (x, new_cache) over the full slot-state arrays."""
     h = rmsnorm(x, p["norm1"], cfg.norm_eps)
     if spec.mixer == ATTN:
         fn = attn.mla_packed if cfg.mla is not None else attn.gqa_packed
         y, new_cache = fn(cfg, p["mixer"], h, positions, cache, token_slot,
-                          token_wpos, kv_bucket=kv_bucket)
+                          token_wpos, kv_bucket=kv_bucket,
+                          token_dst=token_dst, block_tables=block_tables)
     elif spec.mixer == MAMBA:
         y, new_cache = ssm_mod.mamba_packed(cfg, p["mixer"], h, cache,
                                             token_slot, token_active)

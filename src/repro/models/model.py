@@ -351,7 +351,8 @@ def forward_chunk(cfg: ModelConfig, params: dict, tokens: jax.Array,
 def forward_packed(cfg: ModelConfig, params: dict, tokens: jax.Array,
                    cache: list, token_slot: jax.Array, token_pos: jax.Array,
                    token_wpos: jax.Array, token_active: jax.Array,
-                   kv_bucket: Optional[int] = None):
+                   kv_bucket: Optional[int] = None, token_dst=None,
+                   block_tables=None):
     """One iteration's *entire* model work as a single program (DESIGN.md
     §8): the decode tokens (one per decoding slot) and every scheduled
     prefill chunk are packed into one ``(1, T)`` token stream with per-token
@@ -380,6 +381,13 @@ def forward_packed(cfg: ModelConfig, params: dict, tokens: jax.Array,
     are the only shape parameters, so the engine's jit compile cache is
     bounded by |discrete dense sizes| × |kv buckets|.
 
+    ``token_dst`` ((T,) int32 flat physical rows) and ``block_tables``
+    ((N_slots, max_len/block_size) int32) switch attention layers to
+    block-table mode (DESIGN.md §12): K/V scatter by physical row, gather
+    through per-slot tables — requests then share immutable prefix blocks.
+    Both are traced operands of static shape, so the compile-cache bound
+    above is unchanged.
+
     Returns (logits (1, T, vocab[, K]), new_cache).
     """
     x = _embed(cfg, params, tokens)
@@ -396,7 +404,9 @@ def forward_packed(cfg: ModelConfig, params: dict, tokens: jax.Array,
                 x, c = blocks.block_packed(cfg, spec, layer_p[f"sub{i}"], x,
                                            positions, layer_c[f"sub{i}"],
                                            token_slot, token_wpos,
-                                           token_active, kv_bucket=kv_bucket)
+                                           token_active, kv_bucket=kv_bucket,
+                                           token_dst=token_dst,
+                                           block_tables=block_tables)
                 new_c[f"sub{i}"] = c
             return x, new_c
 

@@ -1,0 +1,202 @@
+"""Engine configuration (`EngineConfig`): one frozen dataclass instead of
+``ServeEngine.__init__``'s ~17 loose keyword arguments.
+
+Design rules:
+
+  * **Fields store what the caller said** — ``step_mode=None`` stays
+    ``None``; the ``resolved_*`` accessors apply the defaulting rules
+    (packed step for incremental prefill, async depth 1 for the packed
+    step, env fallbacks for the attention toggles).  This keeps
+    ``dataclasses.replace`` composable: overriding one field never bakes a
+    stale resolution of another into the copy.
+  * **Validation lives in ``__post_init__``** — every invariant the engine
+    used to assert at construction (mode combinations, tp/packed coupling,
+    block-size divisibility for prefix caching) fails fast here, before any
+    device work.
+  * **Env is read at construction, never at trace time** — the
+    ``REPRO_ATTN_FAST`` / ``REPRO_ATTN_STREAM`` fallbacks are captured by
+    ``resolved_attn_fast()`` / ``resolved_attn_stream()``, which the engine
+    calls exactly once in ``__init__`` (and ``from_env`` calls once to
+    pin them into explicit field values).  No jitted body ever consults
+    ``os.environ``.
+  * **Flags are defined once** — ``add_args(parser)`` registers the CLI
+    surface shared by ``launch/serve.py`` and
+    ``benchmarks/offline_throughput.py``; ``from_args(ns, **overrides)``
+    turns the parsed namespace back into a config.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+from typing import Optional
+
+
+def _env_flag(name: str) -> bool:
+    return os.environ.get(name, "0") == "1"
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Serving-engine knobs (model-independent).  ``None`` fields mean
+    "apply the documented default" — see the ``resolved_*`` accessors."""
+    # ---- capacity -----------------------------------------------------------
+    max_slots: int = 8
+    max_len: int = 512
+    # KV block size: the unit of the block-table allocator (and of the
+    # legacy page accounting — ``page_size`` is accepted as an alias)
+    kv_block_size: int = 16
+    total_pages: Optional[int] = None
+    kv_budget_bytes: Optional[int] = None
+    avg_decode_len: float = 64.0
+    # ---- batching -----------------------------------------------------------
+    discrete_sizes: tuple[int, ...] = (256, 128, 64, 32, 16, 8)
+    nano: int = 2
+    # ---- step / pipeline ----------------------------------------------------
+    prefill_mode: str = "incremental"
+    step_mode: Optional[str] = None          # None -> packed iff incremental
+    async_depth: Optional[int] = None        # None -> 1 packed / 0 legacy
+    async_harvest: bool = True
+    tp: int = 1
+    # ---- KV-length bucketing (DESIGN.md §9) ---------------------------------
+    kv_buckets: Optional[tuple[int, ...]] = None
+    kv_bucketing: bool = True
+    # ---- cross-request prefix caching (DESIGN.md §12) -----------------------
+    prefix_caching: bool = False
+    # ---- attention toggles (§Perf HC3; None -> env fallback) ----------------
+    attn_fast: Optional[bool] = None
+    attn_stream: Optional[bool] = None
+    seed: int = 0
+
+    # ------------------------------------------------------------------------
+    def __post_init__(self):
+        assert self.prefill_mode in ("incremental", "recompute"), \
+            self.prefill_mode
+        step = self.resolved_step_mode
+        assert step in ("packed", "legacy"), step
+        assert not (step == "packed" and self.prefill_mode == "recompute"), \
+            "packed step runs incremental prefill only"
+        assert self.tp >= 1, self.tp
+        assert self.tp == 1 or step == "packed", \
+            "tensor-parallel serving (DESIGN.md §11) requires the packed step"
+        depth = self.resolved_async_depth
+        assert depth >= 0, depth
+        assert depth == 0 or step == "packed", \
+            "the async pipeline (DESIGN.md §10) requires the packed step"
+        assert self.kv_block_size >= 1, self.kv_block_size
+        assert self.max_slots >= 1 and self.max_len >= 1
+        if self.prefix_caching:
+            assert step == "packed", \
+                "prefix caching (DESIGN.md §12) requires the packed step"
+            assert self.max_len % self.kv_block_size == 0, \
+                (self.max_len, self.kv_block_size)
+
+    # ---- defaulting rules (never baked into the stored fields) --------------
+    @property
+    def resolved_step_mode(self) -> str:
+        if self.step_mode is not None:
+            return self.step_mode
+        # the recompute prefill path has no packed equivalent — A/B runs
+        # that ask for it get the legacy per-chunk step automatically
+        return "packed" if self.prefill_mode == "incremental" else "legacy"
+
+    @property
+    def resolved_async_depth(self) -> int:
+        if self.async_depth is not None:
+            return int(self.async_depth)
+        # the pipeline is the default serving mode (§5.3 / DESIGN.md §10);
+        # the legacy step has no deferred-sync path
+        return 1 if self.resolved_step_mode == "packed" else 0
+
+    def resolved_attn_fast(self) -> bool:
+        """Explicit value, else one env read — call once at construction."""
+        return _env_flag("REPRO_ATTN_FAST") if self.attn_fast is None \
+            else bool(self.attn_fast)
+
+    def resolved_attn_stream(self) -> bool:
+        return _env_flag("REPRO_ATTN_STREAM") if self.attn_stream is None \
+            else bool(self.attn_stream)
+
+    def resolved_kv_buckets(self) -> tuple[int, ...]:
+        """The KV-length bucket grid (DESIGN.md §9), ascending, topped by
+        ``max_len``; ``kv_bucketing=False`` pins the single max_len bucket."""
+        from repro.serving.scheduler import default_kv_buckets
+        if not self.kv_bucketing:
+            return (self.max_len,)
+        if self.kv_buckets is None:
+            return default_kv_buckets(self.max_len)
+        grid = tuple(sorted({min(b, self.max_len) for b in self.kv_buckets}))
+        return grid if grid[-1] == self.max_len else grid + (self.max_len,)
+
+    # ---- construction helpers -----------------------------------------------
+    @classmethod
+    def from_env(cls, **overrides) -> "EngineConfig":
+        """A config with the attention-toggle env fallbacks pinned into
+        explicit field values (the single env read of the process's
+        configuration path)."""
+        base = cls(**overrides)
+        return dataclasses.replace(
+            base,
+            attn_fast=base.resolved_attn_fast(),
+            attn_stream=base.resolved_attn_stream())
+
+    @classmethod
+    def add_args(cls, ap: argparse.ArgumentParser) -> None:
+        """Register the shared engine CLI surface (defined once, consumed by
+        ``launch/serve.py`` and ``benchmarks/offline_throughput.py``)."""
+        ap.add_argument("--slots", type=int, default=cls.max_slots,
+                        help="slot count (concurrent active requests)")
+        ap.add_argument("--max-len", type=int, default=256,
+                        help="per-slot cache capacity (tokens)")
+        ap.add_argument("--step-mode", default="packed",
+                        choices=["packed", "legacy"],
+                        help="packed = one fused dispatch/iteration "
+                             "(DESIGN.md §8)")
+        ap.add_argument("--async-depth", type=int, default=None,
+                        help="iterations kept in flight before syncing their "
+                             "sampled tokens (DESIGN.md §10); 0 = eager "
+                             "lock-step; default: 1 packed / 0 legacy")
+        ap.add_argument("--tp", type=int, default=1,
+                        help="tensor-parallel degree (DESIGN.md §11): the "
+                             "packed step runs as one shard_map program over "
+                             "a 1-D model mesh; on CPU the devices come from "
+                             "--xla_force_host_platform_device_count")
+        ap.add_argument("--no-kv-bucketing", action="store_true",
+                        help="sweep max_len every iteration instead of the "
+                             "KV-length bucket (DESIGN.md §9; A/B baseline)")
+        ap.add_argument("--prefix-caching",
+                        action=argparse.BooleanOptionalAction, default=False,
+                        help="cross-request prefix caching over the "
+                             "block-table KV (DESIGN.md §12): identical "
+                             "prompt prefixes are prefilled once and shared "
+                             "(copy-on-write on divergence)")
+        ap.add_argument("--kv-block-size", type=int, default=cls.kv_block_size,
+                        help="KV block size (tokens per block-table block; "
+                             "must divide --max-len when --prefix-caching)")
+        ap.add_argument("--attn-fast", action=argparse.BooleanOptionalAction,
+                        default=None,
+                        help="no-upcast attention refs (§Perf HC3); default: "
+                             "REPRO_ATTN_FAST env")
+        ap.add_argument("--attn-stream", action=argparse.BooleanOptionalAction,
+                        default=None,
+                        help="streamed long-seq flash ref; default: "
+                             "REPRO_ATTN_STREAM env")
+
+    @classmethod
+    def from_args(cls, ns: argparse.Namespace, **overrides) -> "EngineConfig":
+        """Build a config from an ``add_args`` namespace; ``overrides`` win
+        over flags (benchmark mode matrices pass their per-mode kwargs)."""
+        kw = dict(
+            max_slots=ns.slots,
+            max_len=ns.max_len,
+            step_mode=ns.step_mode,
+            async_depth=ns.async_depth,
+            tp=ns.tp,
+            kv_bucketing=not ns.no_kv_bucketing,
+            prefix_caching=ns.prefix_caching,
+            kv_block_size=ns.kv_block_size,
+            attn_fast=ns.attn_fast,
+            attn_stream=ns.attn_stream,
+        )
+        kw.update(overrides)
+        return cls(**kw)

@@ -70,6 +70,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import deque
 from typing import Optional
 
@@ -87,10 +88,10 @@ from repro.launch.mesh import make_tp_mesh
 from repro.models import blocks
 from repro.models import model as model_lib
 from repro.serving import sampling
+from repro.serving.config import EngineConfig
 from repro.serving.kvcache import PagedKVManager
 from repro.serving.request import Request
-from repro.serving.scheduler import (BatchPlan, GlobalBatchScheduler,
-                                     default_kv_buckets)
+from repro.serving.scheduler import BatchPlan, GlobalBatchScheduler
 
 
 def kv_bytes_per_token(cfg: ModelConfig) -> int:
@@ -190,6 +191,22 @@ class EngineStats:
         return self.tp_collective_bytes / self.iterations \
             if self.iterations else 0.0
 
+    _DERIVED = ("total_tokens", "throughput", "prefill_expansion",
+                "dispatches_per_iter", "syncs_per_iter",
+                "blocking_syncs_per_iter", "tp_collective_bytes_per_iter")
+
+    def snapshot(self) -> dict:
+        """Common stats schema (same contract as ``KVStats.snapshot``):
+        every counter field plus the derived ratios, consumed by serve.py
+        prints, benchmark JSON artifacts, and tests."""
+        out = {f.name: getattr(self, f.name)
+               for f in dataclasses.fields(self)}
+        out["dense_batch_hist"] = dict(self.dense_batch_hist)
+        out["kv_bucket_hist"] = dict(self.kv_bucket_hist)
+        for name in self._DERIVED:
+            out[name] = getattr(self, name)
+        return out
+
 
 @dataclasses.dataclass
 class _InFlight:
@@ -207,123 +224,141 @@ def _to_token(v) -> int:
 
 
 class ServeEngine:
-    def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 8,
-                 max_len: int = 512, page_size: int = 16,
-                 total_pages: Optional[int] = None,
-                 kv_budget_bytes: Optional[int] = None,
-                 avg_decode_len: float = 64.0,
-                 discrete_sizes: tuple[int, ...] = (256, 128, 64, 32, 16, 8),
-                 prefill_mode: str = "incremental",
-                 step_mode: Optional[str] = None,
-                 async_depth: Optional[int] = None,
-                 async_harvest: bool = True,
-                 nano: int = 2,
-                 tp: int = 1,
-                 kv_buckets: Optional[tuple[int, ...]] = None,
-                 kv_bucketing: bool = True,
-                 attn_fast: Optional[bool] = None,
-                 attn_stream: Optional[bool] = None,
-                 seed: int = 0):
-        assert prefill_mode in ("incremental", "recompute"), prefill_mode
-        if step_mode is None:
-            # the recompute prefill path has no packed equivalent — A/B runs
-            # that ask for it get the legacy per-chunk step automatically
-            step_mode = "packed" if prefill_mode == "incremental" else "legacy"
-        assert step_mode in ("packed", "legacy"), step_mode
-        assert not (step_mode == "packed" and prefill_mode == "recompute"), \
-            "packed step runs incremental prefill only"
-        assert tp >= 1, tp
-        assert tp == 1 or step_mode == "packed", \
-            "tensor-parallel serving (DESIGN.md §11) requires the packed step"
-        if async_depth is None:
-            # the pipeline is the default serving mode (§5.3 / DESIGN.md
-            # §10); the legacy step has no deferred-sync path
-            async_depth = 1 if step_mode == "packed" else 0
-        assert async_depth >= 0, async_depth
-        assert async_depth == 0 or step_mode == "packed", \
-            "the async pipeline (DESIGN.md §10) requires the packed step"
+    #: legacy keyword -> EngineConfig field (one release of back-compat;
+    #: ``page_size`` is the old name for the block-table block size)
+    _LEGACY_KWARGS = {
+        "max_slots": "max_slots", "max_len": "max_len",
+        "page_size": "kv_block_size", "kv_block_size": "kv_block_size",
+        "total_pages": "total_pages", "kv_budget_bytes": "kv_budget_bytes",
+        "avg_decode_len": "avg_decode_len",
+        "discrete_sizes": "discrete_sizes", "prefill_mode": "prefill_mode",
+        "step_mode": "step_mode", "async_depth": "async_depth",
+        "async_harvest": "async_harvest", "nano": "nano", "tp": "tp",
+        "kv_buckets": "kv_buckets", "kv_bucketing": "kv_bucketing",
+        "prefix_caching": "prefix_caching", "attn_fast": "attn_fast",
+        "attn_stream": "attn_stream", "seed": "seed",
+    }
+
+    def __init__(self, cfg: ModelConfig, params,
+                 config: Optional[EngineConfig] = None, **kwargs):
+        """``ServeEngine(cfg, params, EngineConfig(...))`` is the
+        configuration surface; every engine knob lives on the frozen
+        ``EngineConfig`` (serving/config.py), validated in its
+        ``__post_init__``.  ``**kwargs`` are accepted as overrides on top of
+        ``config`` — and, with no ``config``, as the legacy keyword style
+        (deprecated for one release; ``page_size`` maps to
+        ``kv_block_size``)."""
+        unknown = set(kwargs) - set(self._LEGACY_KWARGS)
+        if unknown:
+            raise TypeError(f"unknown engine kwargs: {sorted(unknown)}")
+        mapped = {self._LEGACY_KWARGS[k]: v for k, v in kwargs.items()}
+        if config is None:
+            if mapped:
+                warnings.warn(
+                    "ServeEngine(cfg, params, max_slots=..., ...) keyword "
+                    "configuration is deprecated; pass "
+                    "ServeEngine(cfg, params, EngineConfig(...))",
+                    DeprecationWarning, stacklevel=2)
+            config = EngineConfig(**mapped)
+        elif mapped:
+            config = dataclasses.replace(config, **mapped)
+        self.config = config
         self.cfg = cfg
         self.params = params
-        self.max_slots = max_slots
-        self.max_len = max_len
-        self.prefill_mode = prefill_mode
-        self.step_mode = step_mode
+        self.max_slots = config.max_slots
+        self.max_len = config.max_len
+        self.prefill_mode = config.prefill_mode
+        self.step_mode = config.resolved_step_mode
         # async pipeline (DESIGN.md §10): up to async_depth iterations stay
         # in flight; async_harvest additionally retires any already-finished
         # iteration without blocking, shrinking the speculation window
         # (tests pin it False to exercise worst-case lag deterministically)
-        self.async_depth = int(async_depth)
-        self.async_harvest = bool(async_harvest)
+        self.async_depth = config.resolved_async_depth
+        self.async_harvest = bool(config.async_harvest)
         self._ring: deque[_InFlight] = deque()
-        self.nano = nano
-        self.key = jax.random.PRNGKey(seed)
-        # §Perf HC3 toggles, promoted from trace-time env reads (a retrace
-        # footgun) to explicit arguments: resolved ONCE here (env is only
-        # the fallback default) and pinned around every jitted trace body,
-        # so a later env flip can never silently change a retrace
-        self.attn_fast = ops.attn_fast_default() if attn_fast is None \
-            else bool(attn_fast)
-        self.attn_stream = ops.attn_stream_default() if attn_stream is None \
-            else bool(attn_stream)
+        self.nano = config.nano
+        self.key = jax.random.PRNGKey(config.seed)
+        # §Perf HC3 toggles (single source of truth: EngineConfig): resolved
+        # ONCE here — an explicit config value wins, else the process
+        # default (an active ops.attn_config pin, else one env read) — and
+        # pinned around every jitted trace body, so a later env flip can
+        # never silently change a retrace (EngineConfig.from_env pins env
+        # into explicit field values for callers who want that eagerly)
+        self.attn_fast = bool(config.attn_fast) \
+            if config.attn_fast is not None else ops.attn_fast_default()
+        self.attn_stream = bool(config.attn_stream) \
+            if config.attn_stream is not None else ops.attn_stream_default()
         # KV-length bucket grid (DESIGN.md §9): the packed step sweeps only
         # the iteration's bucket, not max_len; kv_bucketing=False pins the
         # single max_len bucket (the pre-§9 dense-vs-full-cache behaviour,
         # kept for A/B)
-        if not kv_bucketing:
-            self.kv_buckets = (max_len,)
-        elif kv_buckets is None:
-            self.kv_buckets = default_kv_buckets(max_len)
-        else:
-            grid = tuple(sorted({min(b, max_len) for b in kv_buckets}))
-            self.kv_buckets = grid if grid[-1] == max_len \
-                else grid + (max_len,)
+        self.kv_buckets = config.resolved_kv_buckets()
 
         # per-token KV bytes from the actual cache leaves — NOT the GQA
         # formula: MLA caches only the latent (c_kv + k_rope) and
         # attention-free recurrent models cache nothing per token
+        page_size = config.kv_block_size
         kv_bytes = kv_bytes_per_token(cfg)
-        if total_pages is not None:
-            pages = total_pages
-        elif kv_budget_bytes is not None and kv_bytes > 0:
+        if config.total_pages is not None:
+            pages = config.total_pages
+        elif config.kv_budget_bytes is not None and kv_bytes > 0:
             # device KV budget in bytes -> pages the budget actually buys
             # (what the wrong bytes-per-token used to corrupt: deepseek-style
             # MLA got ~an order of magnitude fewer pages than its latent
             # cache needs)
-            pages = max(int(kv_budget_bytes) // (kv_bytes * page_size), 1)
+            pages = max(int(config.kv_budget_bytes)
+                        // (kv_bytes * page_size), 1)
         else:
-            pages = max_slots * max_len // page_size
+            pages = config.max_slots * config.max_len // page_size
+        # cross-request prefix caching (DESIGN.md §12): block-table mode —
+        # block ids ARE physical storage (flat slot-cache rows / block
+        # size), so the pool is capped at what the leaves can hold, and the
+        # model must be attention-only (recurrent mixers carry per-slot
+        # state that cannot be block-shared)
+        self.prefix_caching = bool(config.prefix_caching)
+        if self.prefix_caching:
+            assert all(s.mixer == ATTN for s in cfg.layer_specs()), \
+                "prefix caching (DESIGN.md §12) needs attention-only models"
+            for b in self.kv_buckets:
+                assert b % page_size == 0, \
+                    (f"kv bucket {b} not divisible by kv_block_size "
+                     f"{page_size}")
+            pages = min(pages, config.max_slots * config.max_len // page_size)
+        self._nb_cols = config.max_len // page_size
         self.kv = PagedKVManager(total_pages=pages, page_size=page_size,
                                  bytes_per_token=kv_bytes,
-                                 avg_decode_len=avg_decode_len)
+                                 avg_decode_len=config.avg_decode_len,
+                                 prefix_caching=self.prefix_caching)
         self.scheduler = GlobalBatchScheduler(
-            self.kv, discrete_sizes=discrete_sizes, max_active=max_slots,
-            kv_buckets=self.kv_buckets)
+            self.kv, discrete_sizes=config.discrete_sizes,
+            max_active=config.max_slots, kv_buckets=self.kv_buckets,
+            max_request_len=self.max_len)
 
         # slot caches: model cache trees with leading batch = max_slots
-        self.cache = model_lib.init_cache(cfg, 1, max_slots, max_len)
-        self.cache_len = jnp.zeros((max_slots,), jnp.int32)
+        self.cache = model_lib.init_cache(cfg, 1, self.max_slots, self.max_len)
+        self.cache_len = jnp.zeros((self.max_slots,), jnp.int32)
         # device-resident sampled-token feedback (DESIGN.md §10): the packed
         # program scatters each sample point's token here and gathers the
         # next iteration's decode inputs from it, so the host never needs a
         # result transfer to form the next input stream (multi-codebook
         # frontends keep codebook 0, matching the host feedback path)
-        self.last_token = jnp.zeros((max_slots,), jnp.int32)
-        self.slot_free = list(range(max_slots))
+        self.last_token = jnp.zeros((self.max_slots,), jnp.int32)
+        self.slot_free = list(range(self.max_slots))
         self.stats = EngineStats()
         # host mirror of each slot's context length (packed step builds its
         # per-token positions from this without any device read)
-        self._pos = np.zeros((max_slots,), np.int64)
+        self._pos = np.zeros((self.max_slots,), np.int64)
 
         # fresh one-slot cache, scattered into a slot on (re)assignment so a
         # reused slot never leaks the previous request's recurrent state
-        self._slot_init = model_lib.init_cache(cfg, 1, 1, max_len)
+        self._slot_init = model_lib.init_cache(cfg, 1, 1, self.max_len)
 
         # tensor parallelism (DESIGN.md §11): 1-D ("model",) mesh, params
         # and slot caches placed with the manual shard_map layout (fused
         # x‖z / u‖g projection columns re-interleaved so each shard holds
         # matching halves); the last_token / cache_len buffers stay
         # replicated so the §10 feedback loop closes without a collective
-        self.tp = int(tp)
+        self.tp = int(config.tp)
         self._mesh = None
         # modeled collective wire bytes per launched token (linear in T):
         # resolved once here so the per-iteration stats update off the §10
@@ -351,9 +386,20 @@ class ServeEngine:
         if self.tp == 1:
             self._packed_step = jax.jit(self._packed_impl,
                                         donate_argnums=(1, 9),
-                                        static_argnums=(12,))
+                                        static_argnums=(14,))
         else:
             self._packed_step = self._build_packed_tp_step()
+        # block-table operands (DESIGN.md §12) are traced arrays of static
+        # shape, so they add no compile-cache axis; outside prefix mode the
+        # step gets these (1,) dummies, which the python-constant
+        # ``prefix_caching`` branch in ``_packed_core`` dead-code-eliminates
+        self._dummy_dst = jnp.zeros((1,), jnp.int32)
+        self._dummy_blk = jnp.zeros((1,), jnp.int32)
+        # whole-block device copy for copy-on-write divergence: (src, dst)
+        # are traced scalars, so ALL CoW traffic shares one compiled
+        # program; the donated cache makes each copy a data dependency of
+        # the following packed dispatch (device-order safety without a sync)
+        self._cow_step = jax.jit(self._cow_impl, donate_argnums=(0,))
         self._decode_step = jax.jit(self._decode_impl, donate_argnums=(1,))
         # one compiled program per bucketed chunk length (scheduler-quantized)
         self._prefill_step = jax.jit(self._prefill_impl, donate_argnums=(1,))
@@ -407,17 +453,20 @@ class ServeEngine:
     # ---- jitted token-packed step (one dispatch per iteration) --------------
     def _packed_impl(self, params, cache, tokens, token_slot, token_pos,
                      token_wpos, token_active, cache_len, reset, last_token,
-                     from_last, sample_slot, kv_bucket):
+                     from_last, sample_slot, token_dst, block_tables,
+                     kv_bucket):
         """tp=1 entry: the packed body with the fresh-slot cache closed over
         (the TP entry passes it as a shard_map operand instead)."""
         return self._packed_core(params, cache, tokens, token_slot, token_pos,
                                  token_wpos, token_active, cache_len, reset,
                                  last_token, from_last, sample_slot,
-                                 self._slot_init, kv_bucket)
+                                 token_dst, block_tables, self._slot_init,
+                                 kv_bucket)
 
     def _packed_core(self, params, cache, tokens, token_slot, token_pos,
                      token_wpos, token_active, cache_len, reset, last_token,
-                     from_last, sample_slot, slot_init, kv_bucket):
+                     from_last, sample_slot, token_dst, block_tables,
+                     slot_init, kv_bucket):
         """The whole iteration as one program (DESIGN.md §8): reset reused
         slots' recurrent state, substitute the stream's decode placeholders
         with the device-resident ``last_token`` buffer (§10 — the previous
@@ -436,9 +485,13 @@ class ServeEngine:
         toks = sampling.substitute_last(tokens, last_token, token_slot,
                                         from_last)
         with ops.attn_config(fast=self.attn_fast, stream=self.attn_stream):
+            # self.prefix_caching is a python constant per engine, so the
+            # non-prefix trace never sees the (dummy) block operands at all
             logits, new_cache = model_lib.forward_packed(
                 self.cfg, params, toks, cache, token_slot, token_pos,
-                token_wpos, token_active, kv_bucket=kv_bucket)
+                token_wpos, token_active, kv_bucket=kv_bucket,
+                token_dst=token_dst if self.prefix_caching else None,
+                block_tables=block_tables if self.prefix_caching else None)
         next_tok = sampling.greedy(logits[0])
         new_last = sampling.scatter_last(last_token, sample_slot, next_tok)
         new_len = jnp.where(reset, 0, cache_len)
@@ -459,37 +512,42 @@ class ServeEngine:
         param_specs = tp_lib.param_pspecs_tp(self.cfg)
         cache_specs = tp_lib.cache_pspecs_tp(self.cfg)
         rep = P()
-        in_specs = (param_specs, cache_specs) + (rep,) * 10 + (cache_specs,)
+        # token_dst / block_tables ride as replicated operands: the cache
+        # leaves shard on head/channel axes only, so block ids (flat
+        # (slot, seq) rows / block size) are shard-local and identical on
+        # every shard (DESIGN.md §12)
+        in_specs = (param_specs, cache_specs) + (rep,) * 12 + (cache_specs,)
         out_specs = (rep, cache_specs, rep, rep)
 
         def entry(params, cache, tokens, token_slot, token_pos, token_wpos,
                   token_active, cache_len, reset, last_token, from_last,
-                  sample_slot, slot_init, kv_bucket):
+                  sample_slot, token_dst, block_tables, slot_init, kv_bucket):
             def body(params, cache, tokens, token_slot, token_pos,
                      token_wpos, token_active, cache_len, reset, last_token,
-                     from_last, sample_slot, slot_init):
+                     from_last, sample_slot, token_dst, block_tables,
+                     slot_init):
                 nano = nano_batch_sizes_for(tokens.shape[1], self.nano).sizes
                 with tp_lib.tp_ctx("model", self.tp, nano):
                     return self._packed_core(
                         params, cache, tokens, token_slot, token_pos,
                         token_wpos, token_active, cache_len, reset,
-                        last_token, from_last, sample_slot, slot_init,
-                        kv_bucket)
+                        last_token, from_last, sample_slot, token_dst,
+                        block_tables, slot_init, kv_bucket)
             return shard_map_compat(body, mesh, in_specs, out_specs,
                                     check=False)(
                 params, cache, tokens, token_slot, token_pos, token_wpos,
                 token_active, cache_len, reset, last_token, from_last,
-                sample_slot, slot_init)
+                sample_slot, token_dst, block_tables, slot_init)
 
-        jitted = jax.jit(entry, donate_argnums=(1, 9), static_argnums=(13,))
+        jitted = jax.jit(entry, donate_argnums=(1, 9), static_argnums=(15,))
 
         def step(params, cache, tokens, token_slot, token_pos, token_wpos,
                  token_active, cache_len, reset, last_token, from_last,
-                 sample_slot, kv_bucket):
+                 sample_slot, token_dst, block_tables, kv_bucket):
             return jitted(params, cache, tokens, token_slot, token_pos,
                           token_wpos, token_active, cache_len, reset,
-                          last_token, from_last, sample_slot,
-                          self._slot_init, kv_bucket)
+                          last_token, from_last, sample_slot, token_dst,
+                          block_tables, self._slot_init, kv_bucket)
 
         step._cache_size = jitted._cache_size
         return step
@@ -516,8 +574,37 @@ class ServeEngine:
             out.append(g)
         return out
 
+    # ---- copy-on-write block copy (DESIGN.md §12) ---------------------------
+    def _cow_impl(self, cache, src, dst):
+        """Copy physical block ``src`` -> ``dst`` in every attention cache
+        leaf (prefix caching implies an attention-only model).  ``src`` and
+        ``dst`` are *traced* int32 scalars, so all CoW traffic shares ONE
+        compiled program; the cache is donated, making each queued copy a
+        data dependency of the next packed dispatch — device ordering
+        without a host sync, and no extra ``model_dispatches``."""
+        bs = self.kv.page_size
+
+        def copy(c):
+            # leaves are (L, slots, max_len, ...); blocks live in the flat
+            # (slots*max_len) row space, sharded (if at all) on trailing
+            # head/channel axes only — shard-local reshape is safe
+            flat = c.reshape((c.shape[0], c.shape[1] * c.shape[2])
+                             + c.shape[3:])
+            blk = jax.lax.dynamic_slice_in_dim(flat, src * bs, bs, axis=1)
+            flat = jax.lax.dynamic_update_slice_in_dim(flat, blk, dst * bs,
+                                                       axis=1)
+            return flat.reshape(c.shape)
+
+        return jax.tree.map(copy, cache)
+
     # ---- public API ----------------------------------------------------------
     def submit(self, req: Request) -> None:
+        # a slot holds max_len positions; without this clamp a request with
+        # prompt_len + max_new_tokens > max_len decodes past the cache and
+        # trips the kv-bucket bound mid-run (admission only checks pool
+        # capacity, not per-slot extent)
+        req.max_new_tokens = min(req.max_new_tokens,
+                                 max(self.max_len - req.prompt_len, 0))
         self.scheduler.submit(req)
 
     @property
@@ -625,6 +712,18 @@ class ServeEngine:
                 reset[r.slot] = True
                 self._pos[r.slot] = 0
 
+        bs = self.kv.page_size
+        oob = self.max_slots * self.max_len
+        if self.prefix_caching:
+            # decode writes land at pos = _pos[slot] (not yet advanced):
+            # grow each decoding request's block table NOW, launch-side, so
+            # the write target exists before the (possibly deferred-commit)
+            # ``extend`` ever runs (DESIGN.md §12)
+            for seg in packed.segments:
+                if seg.is_decode:
+                    self.kv.ensure(seg.req.rid,
+                                   int(self._pos[seg.req.slot]) + 1)
+
         t_total = packed.launch_tokens
         tokens = np.zeros((t_total,), np.int32)
         slot = np.zeros((t_total,), np.int32)
@@ -633,23 +732,45 @@ class ServeEngine:
         # decode positions take last_token[slot] on device (§10): the host
         # writes a placeholder and never needs the sampled value
         from_last = np.zeros((t_total,), bool)
+        # block-table operands (prefix mode): per-token flat scatter target
+        # (OOB = dropped write, covers padding) and per-slot block tables
+        token_dst = np.full((t_total,), oob, np.int64)
+        tables_arr = np.zeros((self.max_slots, self._nb_cols), np.int32)
         sample_at: list[tuple[int, int]] = []      # (rid, stream index)
         t = 0
         for seg in packed.segments:
             r = seg.req
+            tbl = None
+            if self.prefix_caching:
+                tbl = np.asarray(self.kv.table(r.rid), np.int64)
+                # the allocator sizes tables by *predicted* length
+                # (prompt + avg_decode), which may exceed max_len — blocks
+                # past max_len // bs hold no writable positions, so the
+                # gather table only needs the addressable prefix
+                nb = min(len(tbl), self._nb_cols)
+                tables_arr[r.slot, :nb] = tbl[:nb]
             if seg.is_decode:
                 from_last[t] = True
                 slot[t] = r.slot
-                pos[t] = self._pos[r.slot]
+                p = int(self._pos[r.slot])
+                pos[t] = p
                 active[t] = True
+                if tbl is not None and p // bs < len(tbl):
+                    token_dst[t] = tbl[p // bs] * bs + p % bs
                 sample_at.append((r.rid, t))
                 t += 1
             else:
                 ln = seg.length
                 tokens[t:t + ln] = r.prompt[seg.offset:seg.offset + ln]
                 slot[t:t + ln] = r.slot
-                pos[t:t + ln] = np.arange(seg.offset, seg.offset + ln)
+                qs = np.arange(seg.offset, seg.offset + ln)
+                pos[t:t + ln] = qs
                 active[t:t + ln] = True
+                if tbl is not None and len(tbl):
+                    cov = qs // bs < len(tbl)
+                    token_dst[t:t + ln] = np.where(
+                        cov, tbl[np.minimum(qs // bs, len(tbl) - 1)] * bs
+                        + qs % bs, oob)
                 if seg.offset + ln == r.prompt_len:
                     sample_at.append((r.rid, t + ln - 1))
                 t += ln
@@ -693,6 +814,17 @@ class ServeEngine:
         self.stats.prefill_tokens += packed.tokens - n_decode
         self.stats.prefill_model_tokens += packed.tokens - n_decode
         self.stats.packed_pad_tokens += packed.padding
+        if self.prefix_caching:
+            dst_op = jnp.asarray(token_dst.astype(np.int32))
+            tbl_op = jnp.asarray(tables_arr)
+            # drain queued copy-on-write block copies BEFORE the dispatch:
+            # cache donation chains each copy in front of the forward pass
+            # on device, with no host sync and no extra model dispatch
+            for c_src, c_dst in self.kv.take_pending_copies():
+                self.cache = self._cow_step(self.cache, jnp.int32(c_src),
+                                            jnp.int32(c_dst))
+        else:
+            dst_op, tbl_op = self._dummy_dst, self._dummy_blk
         t_disp = time.perf_counter()
         self.stats.host_time += t_disp - t_host
         next_tok, self.cache, self.cache_len, self.last_token = \
@@ -700,7 +832,8 @@ class ServeEngine:
                 self.params, self.cache, tok_in, jnp.asarray(slot),
                 jnp.asarray(pos), jnp.asarray(wpos), jnp.asarray(active),
                 self.cache_len, jnp.asarray(reset), self.last_token,
-                jnp.asarray(from_last), jnp.asarray(sample_slot), kv_bucket)
+                jnp.asarray(from_last), jnp.asarray(sample_slot), dst_op,
+                tbl_op, kv_bucket)
         self.stats.dispatch_time += time.perf_counter() - t_disp
         self.stats.model_dispatches += 1
         return _InFlight(plan=plan, sample_at=sample_at, tokens=next_tok)

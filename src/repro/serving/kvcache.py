@@ -1,28 +1,40 @@
-"""Paged KV accounting + asynchronous host offload (paper §4.4 / §5.4).
+"""Block-table KV cache: refcounted fixed-size blocks, cross-request prefix
+sharing, copy-on-write, pluggable eviction (paper §4.4 / §5.4; DESIGN.md §12).
 
-Pages are the unit of memory accounting, admission control, and offload:
+The allocator manages a pool of ``total_pages`` fixed-size blocks (one block
+= ``page_size`` token rows of every attention-cache leaf).  Each request
+holds a *block table* — an ordered list of block ids — instead of a
+contiguous slot row, which buys:
 
-  * **Peak-memory estimation** — before admitting a request, simulate every
-    active request growing one token/iteration until its predicted end
-    (prompt + avg decode length) and take the max in-flight page count over
-    the finish-time sweep; admit only if the peak fits (paper §4.4).
-  * **Page aggregation before offload** — offloaded pages are first gathered
-    into one contiguous buffer (the paper's on-device rearrangement kernel;
-    Fig. 8 shows scattered D2H is ~an order of magnitude slower), then copied
-    host-side in one shot.  We model it with a real gather + a byte counter.
-  * **Host pool with LRU** — finished requests' KV lives on the host (the
-    paper's CPU/SSD tiers collapse into one host tier here), re-uploadable
-    for multi-round conversations; LRU-evicted beyond capacity.
+  * **Cross-request prefix caching** — full blocks are content-hashed with a
+    chained digest (parent digest + the block's token ids, so a block's key
+    pins its entire prefix).  A new request's prompt is matched block-by-
+    block against the hash table; matched blocks are shared (refcount++) and
+    their tokens are never prefilled again (``KVStats.prefix_hit_tokens``).
+  * **Copy-on-write** — a shared or hash-registered block is immutable.  A
+    request that diverges mid-block gets a private copy: a fresh block is
+    allocated, a (src, dst) device copy is queued (the engine drains
+    ``take_pending_copies()`` before its next dispatch), and only the copy
+    is written (``KVStats.cow_copies``).
+  * **Pluggable eviction** — blocks whose refcount drops to 0 but that are
+    still hash-registered go to the ``Evictor`` (default LRU) instead of
+    the free list: they keep serving prefix hits until capacity pressure
+    reclaims them (``KVStats.evicted_blocks``).
 
-The compute path (engine.py) uses contiguous per-slot caches — on TPU the
-paged decode kernel (kernels/decode_attention.paged_decode_attention) reads
-through the page table directly; equivalence is covered by kernel tests.
+Accounting (peak-memory admission, host offload pool) is unchanged from the
+page-granular design: blocks are the unit of admission control, the §4.4
+finish-time sweep runs on launch-side state (committed + in-flight tokens,
+DESIGN.md §10), and finished requests' KV is offloaded to a host LRU pool.
+With ``prefix_caching=False`` (the default) no block is ever shared or
+registered and the allocator behaves exactly like the per-request paged
+accounting it replaces.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from collections import OrderedDict
-from typing import Optional
+from typing import Iterable, Optional, Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
@@ -43,21 +55,142 @@ class KVStats:
     # stay 0 now that peak_pages counts in-flight tokens (regression
     # signal; tests/test_kv_accounting.py)
     extend_failures: int = 0
+    # ---- prefix caching (DESIGN.md §12) ------------------------------------
+    prefix_hit_tokens: int = 0      # prompt tokens served from shared blocks
+    cow_copies: int = 0             # block copies queued on divergence
+    evicted_blocks: int = 0         # cached ref-0 blocks reclaimed
+
+    def snapshot(self) -> dict:
+        """Common stats schema (consumed by serve.py prints, benchmark JSON
+        artifacts, and tests): every counter field, plainly."""
+        return {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self)}
+
+
+class Evictor(Protocol):
+    """Eviction policy over cached-but-unreferenced blocks: blocks enter
+    when their refcount drops to 0 while still hash-registered, leave either
+    by being re-shared (``remove``) or reclaimed for allocation (``pop``)."""
+
+    def add(self, block: int) -> None: ...
+    def remove(self, block: int) -> None: ...
+    def pop(self) -> int: ...
+    def __len__(self) -> int: ...
+    def __contains__(self, block: int) -> bool: ...
+
+
+class LRUEvictor:
+    """Default policy: reclaim the least-recently-cached block first."""
+
+    def __init__(self):
+        self._order: OrderedDict[int, None] = OrderedDict()
+
+    def add(self, block: int) -> None:
+        self._order[block] = None
+        self._order.move_to_end(block)
+
+    def remove(self, block: int) -> None:
+        self._order.pop(block, None)
+
+    def pop(self) -> int:
+        block, _ = self._order.popitem(last=False)
+        return block
+
+    def __len__(self) -> int:
+        return len(self._order)
+
+    def __contains__(self, block: int) -> bool:
+        return block in self._order
+
+
+@runtime_checkable
+class BlockAllocator(Protocol):
+    """The engine/scheduler-facing cache interface (DESIGN.md §12).  All
+    sizes are token counts; all storage is block-granular.  Implementations
+    must keep the invariants the engine relies on:
+
+      * a block with refcount > 0 is never freed or handed out again;
+      * hash-table entries only point at *immutable* full blocks (registered
+        blocks are never written in place — divergence copies first);
+      * ``allocate``/``ensure``/``extend`` never hand the same block to two
+        tables without bumping its refcount.
+    """
+
+    page_size: int
+    bytes_per_token: int
+    stats: KVStats
+
+    def pages_for(self, tokens: int) -> int: ...
+    def peak_pages(self, active: list[Request],
+                   candidate: Optional[Request] = None) -> int: ...
+    def can_admit(self, req: Request, active: list[Request]) -> bool: ...
+    def allocate(self, rid: int, tokens: int, *,
+                 token_ids: Optional[Sequence[int]] = None) -> bool: ...
+    def extend(self, rid: int, new_len: int, *,
+               token_ids: Optional[Sequence[int]] = None) -> bool: ...
+    def ensure(self, rid: int, new_len: int) -> bool: ...
+    def free(self, rid: int) -> None: ...
+    def table(self, rid: int) -> list[int]: ...
+    def cached_tokens(self, rid: int) -> int: ...
+    def take_pending_copies(self) -> list[tuple[int, int]]: ...
+    def offload(self, rid: int, kv_data: Optional[np.ndarray] = None, *,
+                nbytes: Optional[int] = None) -> None: ...
+    def upload(self, rid: int, dtype, shape) -> Optional[np.ndarray]: ...
+
+
+def _block_digest(parent: bytes, token_ids: Iterable[int]) -> bytes:
+    """Chained content hash: a block's key commits to its own tokens *and*
+    its whole prefix (the parent's key), so equal keys mean equal KV."""
+    h = hashlib.sha256(parent)
+    h.update(np.asarray(list(token_ids), np.int64).tobytes())
+    return h.digest()
+
+
+def _common_prefix(a: Sequence[int], b: Sequence[int]) -> int:
+    n = 0
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        n += 1
+    return n
 
 
 class PagedKVManager:
+    """Block-table allocator (implements ``BlockAllocator``).
+
+    ``prefix_caching=False`` (default): every block is private, the hash
+    table and evictor stay empty, and behaviour is identical to the old
+    per-request paged accounting.  ``prefix_caching=True`` enables the
+    content-hash table, block sharing, and CoW described in the module
+    docstring; ``evictor`` plugs the reclaim policy (default LRU)."""
+
     def __init__(self, *, total_pages: int, page_size: int,
                  bytes_per_token: int, avg_decode_len: float,
-                 host_capacity_bytes: int = 1 << 30):
+                 host_capacity_bytes: int = 1 << 30,
+                 prefix_caching: bool = False,
+                 evictor: Optional[Evictor] = None):
         self.page_size = page_size
         self.bytes_per_token = bytes_per_token
         self.avg_decode_len = avg_decode_len
         self.host_capacity = host_capacity_bytes
+        self.prefix_caching = bool(prefix_caching)
         self.free_pages = list(range(total_pages))
-        self.tables: dict[int, list[int]] = {}        # rid -> page ids
+        self.tables: dict[int, list[int]] = {}        # rid -> block ids
         self.lengths: dict[int, int] = {}             # rid -> token count
         self.host_pool: OrderedDict[int, tuple[int, bytes]] = OrderedDict()
         self.stats = KVStats(device_pages_total=total_pages)
+        # ---- block-table state (DESIGN.md §12) -----------------------------
+        self.evictor: Evictor = evictor if evictor is not None else LRUEvictor()
+        self._ref: dict[int, int] = {}                # block -> refcount (>0)
+        self._hash: dict[bytes, int] = {}             # chain key -> block
+        self._key: dict[int, bytes] = {}              # registered block -> key
+        self._tokens: dict[int, tuple[int, ...]] = {}  # registered block ids
+        self._parent: dict[int, bytes] = {}           # registered -> parent key
+        self._children: dict[bytes, list[int]] = {}   # parent key -> blocks
+        self._cached: dict[int, int] = {}             # rid -> prefix-hit tokens
+        # rid -> (full blocks promoted/walked, chain digest at that point)
+        self._promoted: dict[int, tuple[int, bytes]] = {}
+        self._pending_copies: list[tuple[int, int]] = []
 
     # ---- accounting -------------------------------------------------------
     def pages_for(self, tokens: int) -> int:
@@ -65,11 +198,15 @@ class PagedKVManager:
 
     @property
     def pages_used(self) -> int:
-        return sum(len(t) for t in self.tables.values())
+        """Distinct blocks referenced by at least one table (shared blocks
+        count once; equals the per-table sum when nothing is shared)."""
+        return len(self._ref)
 
     @property
     def pages_free(self) -> int:
-        return len(self.free_pages)
+        """Blocks allocatable right now: the free list plus cached ref-0
+        blocks the evictor can reclaim (empty without prefix caching)."""
+        return len(self.free_pages) + len(self.evictor)
 
     # ---- peak-memory admission (§4.4) --------------------------------------
     def peak_pages(self, active: list[Request],
@@ -86,7 +223,11 @@ class PagedKVManager:
         exactly those rows, letting admission overshoot the pool and
         ``extend`` fail at commit.  (``prefill_launched`` ahead of
         ``prefill_done`` is covered by the ``prompt_len`` floor — admission
-        allocates the full prompt up front.)"""
+        allocates the full prompt up front.)
+
+        Prefix sharing is deliberately ignored: shared blocks make the
+        sweep *conservative* (it can defer an admission that would fit,
+        never admit one that would not)."""
         reqs = list(active) + ([candidate] if candidate is not None else [])
         if not reqs:
             return 0
@@ -112,33 +253,237 @@ class PagedKVManager:
     def can_admit(self, req: Request, active: list[Request]) -> bool:
         return self.peak_pages(active, req) <= self.stats.device_pages_total
 
+    # ---- refcounted block pool ---------------------------------------------
+    def _available(self) -> int:
+        return len(self.free_pages) + len(self.evictor)
+
+    def _incref(self, block: int) -> None:
+        self._ref[block] = self._ref.get(block, 0) + 1
+        self.evictor.remove(block)
+
+    def _decref(self, block: int) -> None:
+        n = self._ref[block] - 1
+        if n > 0:
+            self._ref[block] = n
+            return
+        del self._ref[block]
+        if block in self._key:
+            # still hash-registered: keep it cached for future prefix hits
+            # until capacity pressure reclaims it (_take_block)
+            self.evictor.add(block)
+        else:
+            self.free_pages.append(block)
+
+    def _take_block(self) -> int:
+        """A writable private block: the free list first, then reclaim the
+        evictor's pick (unregistering its hash entry — the cached prefix is
+        gone for good, counted in ``evicted_blocks``)."""
+        if self.free_pages:
+            return self.free_pages.pop()
+        block = self.evictor.pop()
+        self._unregister(block)
+        self.stats.evicted_blocks += 1
+        return block
+
+    def _unregister(self, block: int) -> None:
+        key = self._key.pop(block)
+        self._hash.pop(key, None)
+        self._tokens.pop(block, None)
+        parent = self._parent.pop(block, b"")
+        kids = self._children.get(parent)
+        if kids is not None:
+            try:
+                kids.remove(block)
+            except ValueError:
+                pass
+            if not kids:
+                del self._children[parent]
+
+    def _fresh(self, table: list[int]) -> None:
+        block = self._take_block()
+        self._ref[block] = self._ref.get(block, 0) + 1
+        table.append(block)
+
+    def _queue_cow(self, src: int, table: list[int], j: int) -> None:
+        """Replace ``table[j]`` (== src, shared/immutable) with a private
+        copy: allocate dst, queue the (src, dst) device copy, swap the table
+        entry.  src is pinned (extra ref) until the engine drains the copy —
+        an eviction in between could hand src to a new request whose write
+        would race the copy's read."""
+        dst = self._take_block()
+        self._ref[dst] = self._ref.get(dst, 0) + 1
+        self._incref(src)                      # copy-source pin
+        self._pending_copies.append((src, dst))
+        self.stats.cow_copies += 1
+        table[j] = dst
+        self._decref(src)                      # the table's own ref
+
+    def take_pending_copies(self) -> list[tuple[int, int]]:
+        """Queued CoW block copies, (src, dst), cleared on read.  The engine
+        applies them on device *before* its next packed dispatch; copy
+        sources are unpinned here."""
+        out, self._pending_copies = self._pending_copies, []
+        for src, _ in out:
+            self._decref(src)
+        return out
+
     # ---- allocation --------------------------------------------------------
-    def allocate(self, rid: int, tokens: int) -> bool:
+    def allocate(self, rid: int, tokens: int, *,
+                 token_ids: Optional[Sequence[int]] = None) -> bool:
+        """Build ``rid``'s block table for a ``tokens``-token prompt.  With
+        prefix caching and ``token_ids``, the prompt is first matched
+        against the content-hash table: whole matched blocks are shared
+        (refcount++), and a divergence *inside* a cached block takes a CoW
+        copy of it.  At most ``len(token_ids) - 1`` tokens are served from
+        cache — the final prompt token is always recomputed so the prefill
+        still produces the first sampled token."""
+        if rid in self.tables:
+            self.free(rid)
         need = self.pages_for(tokens)
-        if need > len(self.free_pages):
+        matched: list[int] = []
+        cow_src = None
+        cached = 0
+        chain = b""
+        if self.prefix_caching and token_ids is not None and len(token_ids):
+            bs = self.page_size
+            ids = tuple(token_ids)
+            cap = len(ids) - 1          # always recompute >= 1 prompt token
+            j = 0
+            while (j + 1) * bs <= cap:
+                key = _block_digest(chain, ids[j * bs:(j + 1) * bs])
+                block = self._hash.get(key)
+                if block is None:
+                    break
+                matched.append(block)
+                chain = key
+                j += 1
+            cached = j * bs
+            if cached < cap:
+                # partial-tail match: a registered sibling whose leading
+                # tokens agree — share via CoW, overwrite the divergent tail
+                tail = ids[cached:min(cached + bs, cap)]
+                best = 0
+                for block in self._children.get(chain, ()):
+                    m = _common_prefix(self._tokens[block], tail)
+                    if m > best:
+                        best, cow_src = m, block
+                if best == 0:
+                    cow_src = None
+                else:
+                    cached += best
+        if need - len(matched) > self._available():
             return False
-        self.tables[rid] = [self.free_pages.pop() for _ in range(need)]
+        for block in matched:
+            self._incref(block)
+        table = list(matched)
+        if cow_src is not None:
+            self._queue_cow_new(cow_src, table)
+        while len(table) < need:
+            self._fresh(table)
+        self.tables[rid] = table
         self.lengths[rid] = tokens
+        if self.prefix_caching:
+            self._cached[rid] = cached
+            self._promoted[rid] = (len(matched), chain)
+            self.stats.prefix_hit_tokens += cached
         self._sync_used()
         return True
 
-    def extend(self, rid: int, new_len: int) -> bool:
+    def _queue_cow_new(self, src: int, table: list[int]) -> None:
+        """Append a fresh private copy of ``src`` to ``table`` (admission-
+        time partial-block hit: the request owns the copy from the start)."""
+        dst = self._take_block()
+        self._ref[dst] = self._ref.get(dst, 0) + 1
+        self._incref(src)                      # copy-source pin
+        self._pending_copies.append((src, dst))
+        self.stats.cow_copies += 1
+        table.append(dst)
+
+    def ensure(self, rid: int, new_len: int) -> bool:
+        """Launch-side growth (the engine calls this when it *writes* row
+        ``new_len - 1``, before commit): append blocks to cover ``new_len``
+        and make the written block private — a shared or hash-registered
+        block is immutable, so a write there takes a CoW copy first."""
+        table = self.tables.get(rid)
+        if table is None:
+            return False
+        need = self.pages_for(new_len)
+        while len(table) < need:
+            if not self._available():
+                self.stats.extend_failures += 1
+                return False
+            self._fresh(table)
+        j = (new_len - 1) // self.page_size
+        block = table[j]
+        if self._ref.get(block, 0) > 1 or block in self._key:
+            if not self._available():
+                self.stats.extend_failures += 1
+                return False
+            self._queue_cow(block, table, j)
+        self._sync_used()
+        return True
+
+    def extend(self, rid: int, new_len: int, *,
+               token_ids: Optional[Sequence[int]] = None) -> bool:
+        """Commit-side growth: cover ``new_len`` tokens (idempotent after a
+        launch-side ``ensure``).  With prefix caching, ``token_ids`` — the
+        request's *committed* token stream — promotes newly completed full
+        blocks into the content-hash table (registration makes them
+        immutable; their owner only ever writes beyond them)."""
         have = len(self.tables[rid])
         need = self.pages_for(new_len)
         extra = need - have
-        if extra > len(self.free_pages):
+        if extra > self._available():
             self.stats.extend_failures += 1
             return False
         for _ in range(extra):
-            self.tables[rid].append(self.free_pages.pop())
+            self._fresh(self.tables[rid])
         self.lengths[rid] = new_len
+        if self.prefix_caching and token_ids is not None:
+            self._promote(rid, token_ids)
         self._sync_used()
         return True
 
+    def _promote(self, rid: int, token_ids: Sequence[int]) -> None:
+        """Register every *complete* committed block of ``rid`` whose chain
+        position is still unclaimed.  On a hash collision (another request
+        already registered identical content) the private duplicate stays
+        private — the chain still advances through the canonical key, so
+        later blocks can register."""
+        j, chain = self._promoted.get(rid, (0, b""))
+        table = self.tables[rid]
+        bs = self.page_size
+        committed = len(token_ids)
+        while (j + 1) * bs <= committed and j < len(table):
+            blk_ids = tuple(token_ids[j * bs:(j + 1) * bs])
+            key = _block_digest(chain, blk_ids)
+            block = table[j]
+            if key not in self._hash and block not in self._key:
+                self._hash[key] = block
+                self._key[block] = key
+                self._tokens[block] = blk_ids
+                self._parent[block] = chain
+                self._children.setdefault(chain, []).append(block)
+            chain = key
+            j += 1
+        self._promoted[rid] = (j, chain)
+
     def free(self, rid: int) -> None:
-        self.free_pages.extend(self.tables.pop(rid, []))
+        for block in self.tables.pop(rid, []):
+            self._decref(block)
         self.lengths.pop(rid, None)
+        self._cached.pop(rid, None)
+        self._promoted.pop(rid, None)
         self._sync_used()
+
+    def table(self, rid: int) -> list[int]:
+        """The request's block table (block id of logical block j)."""
+        return self.tables[rid]
+
+    def cached_tokens(self, rid: int) -> int:
+        """Prompt tokens served from shared blocks at admission — the
+        scheduler skips prefilling them (DESIGN.md §12)."""
+        return self._cached.get(rid, 0)
 
     def _sync_used(self):
         self.stats.device_pages_used = self.pages_used
@@ -159,7 +504,9 @@ class PagedKVManager:
         *size-only* entry — full byte/copy/LRU accounting with no host copy
         materialized.  The engine's per-finished-request path uses this (it
         used to allocate a garbage ``np.zeros`` proportional to the
-        request's KV purely to feed the byte counter)."""
+        request's KV purely to feed the byte counter).  Device blocks are
+        released at the end: hash-registered ones stay cached (evictor)
+        and keep serving prefix hits."""
         assert (kv_data is None) != (nbytes is None), \
             "offload takes exactly one of kv_data / nbytes"
         tokens = self.lengths.get(rid, 0)
@@ -193,7 +540,7 @@ class PagedKVManager:
 
     def upload(self, rid: int, dtype, shape) -> Optional[np.ndarray]:
         """Multi-round re-activation: restore KV from host, re-allocating
-        device pages (page distribution kernel).
+        device blocks (page distribution kernel).
 
         Device re-allocation can fail under pressure; the blob must then
         *stay* in the host pool so the caller can retry later (it used to be

@@ -102,10 +102,16 @@ class GlobalBatchScheduler:
                                                     64, 32, 16, 8),
                  max_active: int = 256,
                  prefill_chunk_min: int = 8,
-                 kv_buckets: Optional[tuple[int, ...]] = None):
+                 kv_buckets: Optional[tuple[int, ...]] = None,
+                 max_request_len: Optional[int] = None):
         self.kv = kv
         self.sizes = tuple(sorted(discrete_sizes, reverse=True))
         self.max_active = max_active
+        # per-slot position extent (the engine's max_len): a prompt longer
+        # than a slot can hold is never admitted — it stays in the waiting
+        # queue (long-standing documented behavior), instead of prefilling
+        # past the cache and tripping the kv-bucket bound mid-run
+        self.max_request_len = max_request_len
         # KV-length grid (DESIGN.md §9), ascending; None disables bucketing
         # (PackedPlan.kv_bucket stays None -> the engine sweeps max_len)
         self.kv_buckets = (tuple(sorted(set(kv_buckets)))
@@ -123,21 +129,36 @@ class GlobalBatchScheduler:
         # speculative decode tokens launched for requests that finished
         # before their commit arrived (async pipeline overshoot, §10)
         self.dropped_tokens = 0
+        # prompt tokens served from shared blocks at admission (§12)
+        self.prefix_hit_tokens = 0
 
     # ---- admission ---------------------------------------------------------
     def submit(self, req: Request) -> None:
         self.waiting.append(req)
 
     def _admit(self) -> None:
-        """Eager admission under the peak-memory estimate (§4.4)."""
+        """Eager admission under the peak-memory estimate (§4.4).  With a
+        prefix-caching allocator (DESIGN.md §12) the prompt's token ids are
+        handed to ``allocate`` for content-hash matching, and prefill starts
+        at the cached boundary: the matched prefix's KV already sits in
+        shared blocks, so only the uncached suffix is ever planned."""
+        prefix = getattr(self.kv, "prefix_caching", False)
         while self.waiting and len(self.active) < self.max_active:
             cand = self.waiting[0]
+            if (self.max_request_len is not None
+                    and cand.prompt_len > self.max_request_len):
+                break
             if not self.kv.can_admit(cand, self.active):
                 break
-            if not self.kv.allocate(cand.rid, max(cand.prompt_len, 1)):
+            if not self.kv.allocate(cand.rid, max(cand.prompt_len, 1),
+                                    token_ids=cand.prompt if prefix else None):
                 break
             self.waiting.popleft()
             cand.state = State.PREFILL
+            if prefix:
+                cached = self.kv.cached_tokens(cand.rid)
+                cand.prefill_done = cand.prefill_launched = cached
+                self.prefix_hit_tokens += cached
             self.active.append(cand)
 
     # ---- discrete batching (§4.2) -------------------------------------------
@@ -300,6 +321,7 @@ class GlobalBatchScheduler:
         request was already finalized and returned, so a late append would
         mutate a result the caller holds."""
         finished = []
+        prefix = getattr(self.kv, "prefix_caching", False)
         for c in plan.prefill:
             c.req.prefill_done += c.length
             # lock-step drivers call plan()/commit() without the engine's
@@ -309,7 +331,11 @@ class GlobalBatchScheduler:
             # this is a no-op)
             c.req.prefill_launched = max(c.req.prefill_launched,
                                          c.req.prefill_done)
-            self.kv.extend(c.req.rid, max(c.req.total_tokens, 1))
+            # committed-and-written rows are exactly the prefilled prompt
+            # prefix: full blocks below it promote into the hash table (§12)
+            self.kv.extend(c.req.rid, max(c.req.total_tokens, 1),
+                           token_ids=(c.req.prompt[:c.req.prefill_done]
+                                      if prefix else None))
             if c.req.prefill_remaining == 0:
                 c.req.state = State.DECODE
         for r in list(plan.decode) + [c.req for c in plan.prefill
@@ -329,8 +355,13 @@ class GlobalBatchScheduler:
             # sweep (kvcache.peak_pages) removes the pipeline-lag cause, the
             # rest is inherent to the heuristic; failures are counted
             # (KVStats.extend_failures), the paper's answer is rare reclaim
-            # (State.DISCARDED), not a hard error on the serving loop
-            self.kv.extend(r.rid, r.total_tokens + 1)
+            # (State.DISCARDED), not a hard error on the serving loop.
+            # Committed-and-written rows at this point are the prompt plus
+            # every output but the newest (its KV lands next launch): only
+            # blocks fully below that promote into the hash table (§12)
+            self.kv.extend(r.rid, r.total_tokens + 1,
+                           token_ids=(r.prompt + r.output[:-1]
+                                      if prefix else None))
             hit_eos = (r.eos_id is not None and tok == r.eos_id)
             if r.pending_eos or len(r.output) >= r.max_new_tokens:
                 r.state = State.FINISHED

@@ -23,6 +23,7 @@ import pytest
 
 from repro.configs import get_config, scale_down
 from repro.models import model
+from repro.serving.config import EngineConfig
 from repro.serving.engine import ServeEngine
 from repro.serving.request import Request
 
@@ -90,6 +91,45 @@ def test_tp2_token_exact_vs_tp1(family, depth):
     # the collective-traffic model reports real traffic only under TP
     assert e2.stats.tp_collective_bytes > 0
     assert e1.stats.tp_collective_bytes == 0
+
+
+def _run_prefix(cfg, params, tp, prefix):
+    eng = ServeEngine(cfg, params, EngineConfig(
+        max_slots=2, max_len=48, kv_block_size=8, discrete_sizes=SIZES,
+        avg_decode_len=4.0, tp=tp, prefix_caching=prefix))
+    base = list(range(11, 21))
+    outs = {}
+    # wave 1 completes (and registers its blocks) before wave 2 arrives,
+    # so wave 2 can actually hit the shared prefix
+    for wave in ([(0, base + [30])],
+                 [(i, base + [30 + i]) for i in range(1, 3)]):
+        for rid, prompt in wave:
+            eng.submit(Request(rid=rid, prompt=prompt, max_new_tokens=6))
+        for r in eng.run():
+            outs[r.rid] = tuple(r.output)
+    return eng, outs
+
+
+@needs_devices
+def test_tp2_prefix_caching_token_exact():
+    """Prefix caching composes with TP: block ids index the (shard-local
+    head/channel, replicated slot·seq) cache layout identically on every
+    device, so shared-prefix serving stays f32 token-exact at tp=2 and the
+    dispatch/sync/compile-cache invariants hold."""
+    cfg = _cfg("tiny-toy")
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    _, out_np = _run_prefix(cfg, params, 2, False)
+    eng, out_pc = _run_prefix(cfg, params, 2, True)
+    assert out_np == out_pc
+    assert eng.kv.stats.prefix_hit_tokens == 20      # 2 requests x 10 tokens
+    assert eng.kv.stats.cow_copies == 2
+    # tp=1 with sharing agrees too (same engine, different mesh)
+    _, out_t1 = _run_prefix(cfg, params, 1, True)
+    assert out_t1 == out_pc
+    assert eng.stats.dispatches_per_iter == 1.0
+    assert eng.stats.syncs_per_iter == 1.0
+    assert eng._packed_step._cache_size() <= (len(SIZES) + 1) * len(
+        eng.kv_buckets)
 
 
 @needs_devices
