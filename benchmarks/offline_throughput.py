@@ -369,15 +369,97 @@ def engine_prefix_ab(n_requests: int = 12,
     return rows
 
 
+def engine_spec_ab(n_requests: int = 10, spec_k: int = 4,
+                   base: EngineConfig = EngineConfig()) -> list[dict]:
+    """Speculative-decoding axis (DESIGN.md §13): the async packed step
+    with ``spec_k`` n-gram drafts per decoding slot vs the plain engine,
+    on a repetitive-text workload (motif-tiled prompts, long decodes) —
+    the prompt-lookup drafter's target regime.  Greedy, so the two modes
+    are token-exact by construction and the A/B isolates the schedule:
+    committed tokens per model dispatch must exceed 1 for speculation to
+    pay (each dispatch still sweeps the same weights — the §13 bet is
+    amortizing that sweep over several committed tokens).  Reported:
+    tokens/s, verify acceptance rate, accepted tokens per verify segment,
+    committed decode tokens per dispatch, and the 1-dispatch /
+    1-deferred-sync invariants."""
+    cfg = get_config("tiny-toy")
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    d = 40
+    prompts = []
+    for i in range(2 * n_requests):
+        motif = [int(t) for t in rng.integers(0, cfg.vocab_size, size=4)]
+        prompts.append((motif * 8)[:28 + (i % 4)])
+    rows, raw = [], {}
+    for k in (0, spec_k):
+        ecfg = dataclasses.replace(
+            base, max_slots=8, max_len=128, discrete_sizes=(64, 32, 16, 8),
+            avg_decode_len=float(d), step_mode="packed", async_depth=1,
+            prefill_mode="incremental", kv_bucketing=True,
+            prefix_caching=False, tp=1, spec_k=k,
+            drafter="ngram" if k else None, temperature=0.0, top_k=None)
+        eng = ServeEngine(cfg, params, ecfg)
+        # warmup: same prompt shapes -> compiles every (T, kv) program
+        for i, p in enumerate(prompts[:n_requests]):
+            eng.submit(Request(rid=i, prompt=list(p), max_new_tokens=d))
+        eng.run()
+        warm = eng.stats.snapshot()
+        for i, p in enumerate(prompts[n_requests:]):
+            eng.submit(Request(rid=n_requests + i, prompt=list(p),
+                               max_new_tokens=d))
+        done = eng.run()
+        st = eng.stats.snapshot()
+        tokens = st["total_tokens"] - warm["total_tokens"]
+        wall = st["wall_time"] - warm["wall_time"]
+        iters = st["iterations"] - warm["iterations"]
+        disp = st["model_dispatches"] - warm["model_dispatches"]
+        dec = st["decode_tokens"] - warm["decode_tokens"]
+        segs = st["spec_verify_segments"] - warm["spec_verify_segments"]
+        prop = st["spec_proposed_tokens"] - warm["spec_proposed_tokens"]
+        acc = st["spec_accepted_tokens"] - warm["spec_accepted_tokens"]
+        mode = f"spec-k{k}" if k else "no-spec"
+        raw[mode] = {"tok_s": tokens / max(wall, 1e-9),
+                     "dec_per_disp": dec / max(disp, 1)}
+        rows.append({
+            "bench": "offline_throughput_engine",
+            "case": f"tiny-toy/repetitive/{mode}",
+            "spec_k": k,
+            "finished": len(done),
+            "tokens": tokens,
+            "tok_s_cpu": round(raw[mode]["tok_s"], 1),
+            "iters": iters,
+            "dispatches_per_iter": round(disp / max(iters, 1), 3),
+            "host_syncs_per_iter": round(
+                (st["host_syncs"] - warm["host_syncs"]) / max(iters, 1), 3),
+            "decode_tokens_per_dispatch": round(raw[mode]["dec_per_disp"],
+                                                3),
+            "spec_verify_segments": segs,
+            "spec_acceptance_rate": round(acc / prop, 3) if prop else None,
+            "spec_accepted_per_verify": round((acc + segs) / segs, 3)
+            if segs else None,
+        })
+    rows[-1]["speedup_vs_no_spec"] = round(
+        raw[f"spec-k{spec_k}"]["tok_s"] / max(raw["no-spec"]["tok_s"], 1e-9),
+        3)
+    rows[-1]["decode_per_dispatch_vs_no_spec"] = round(
+        raw[f"spec-k{spec_k}"]["dec_per_disp"]
+        / max(raw["no-spec"]["dec_per_disp"], 1e-9), 3)
+    return rows
+
+
 def run(engine_only: bool = False, base: EngineConfig = EngineConfig(),
-        tp: int = 1, tp_only: bool = False) -> list[dict]:
+        tp: int = 1, tp_only: bool = False,
+        spec_only: bool = False) -> list[dict]:
     if tp_only:
         return engine_tp_ab(tp)
+    if spec_only:
+        return engine_spec_ab(base=base)
     out = [] if engine_only else (
         modeled("llama2-70b", cm.A100_80G, 8)
         + modeled("qwen3-8b", cm.TPU_V5E, 16))
     out += engine_measured(base=base)
     out += engine_prefix_ab(base=base)
+    out += engine_spec_ab(base=base)
     if tp > 1:
         out += engine_tp_ab(tp)
     return out
@@ -397,6 +479,10 @@ def main(argv=None) -> None:
                          "§11; --tp forces N host-platform devices — CI "
                          "runs the tp axis as a separate invocation to keep "
                          "the baseline rows' environment unchanged)")
+    ap.add_argument("--spec-only", action="store_true",
+                    help="run only the speculative-decoding A/B rows "
+                         "(DESIGN.md §13: n-gram drafts vs plain packed "
+                         "engine on a repetitive-text workload)")
     # engine knobs are defined ONCE on EngineConfig (--tp, --attn-fast,
     # --attn-stream, ... — the same surface as launch/serve.py); the mode
     # matrices pin their own A/B axes on top of this base
@@ -411,7 +497,7 @@ def main(argv=None) -> None:
         ensure_host_devices(args.tp)
     rows = run(engine_only=args.engine_only,
                base=EngineConfig.from_args(args), tp=args.tp,
-               tp_only=args.tp_only)
+               tp_only=args.tp_only, spec_only=args.spec_only)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(rows, f, indent=2)
@@ -421,6 +507,22 @@ def main(argv=None) -> None:
                   f"nano={r['nanoflow_tok_s_dev']} seq={r['sequential_tok_s_dev']} "
                   f"opt={r['optimal_tok_s_dev']} ({r['pct_optimal']}% of optimal, "
                   f"{r['speedup']}x)")
+        elif "spec_k" in r:
+            extra = ""
+            if "speedup_vs_no_spec" in r:
+                extra = (f" [{r['speedup_vs_no_spec']}x vs no-spec, "
+                         f"{r['decode_per_dispatch_vs_no_spec']}x "
+                         f"decode/dispatch]")
+            spec = ""
+            if r["spec_acceptance_rate"] is not None:
+                spec = (f", accept {r['spec_acceptance_rate']}, "
+                        f"{r['spec_accepted_per_verify']} tok/verify")
+            print(f"fig10/{r['case']},0.0,{r['tok_s_cpu']} tok/s CPU "
+                  f"({r['tokens']} tokens, {r['iters']} iters, "
+                  f"{r['dispatches_per_iter']} disp/it, "
+                  f"{r['host_syncs_per_iter']} sync/it, "
+                  f"{r['decode_tokens_per_dispatch']} decode tok/dispatch"
+                  f"{spec}){extra}")
         elif "prefix_hit_frac" in r:
             extra = ""
             if "prefill_flops_ratio_vs_no_prefix" in r:

@@ -106,11 +106,17 @@ def packed_segment_order(kinds: Sequence[str],
     token-scan order and the stream layout; semantics are order-invariant
     (tested) because segments only touch their own slot's state.
 
-    kinds: "decode" | "prefill" per segment; lengths: token count per
-    segment.  Returns the permutation of segment indices.
+    kinds: "decode" | "verify" | "prefill" per segment; lengths: token
+    count per segment.  "verify" is a speculative-decoding verify segment
+    (DESIGN.md §13) — a short multi-token run over one slot's KV tail,
+    memory-bound like decode, so it rides in the decode group (stable
+    order) rather than with the compute-bound prefill chunks its length
+    would otherwise sort it into.  Returns the permutation of segment
+    indices.
     """
-    decode = [i for i, k in enumerate(kinds) if k == "decode"]
-    prefill = sorted((i for i, k in enumerate(kinds) if k != "decode"),
+    decode = [i for i, k in enumerate(kinds) if k in ("decode", "verify")]
+    prefill = sorted((i for i, k in enumerate(kinds)
+                      if k not in ("decode", "verify")),
                      key=lambda i: (-lengths[i], i))
     return tuple(decode + prefill)
 

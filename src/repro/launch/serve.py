@@ -135,6 +135,19 @@ def main() -> None:
         print(f"kv bucket histogram: "
               f"{dict(sorted(st['kv_bucket_hist'].items()))}"
               f" (attention sweep {swept / max(dense, 1):.2f}x of max_len)")
+    if eng.spec_k > 0:
+        rate = st["spec_acceptance_rate"]
+        if rate is None:
+            print(f"spec decode k={eng.spec_k}: no verify segments ran")
+        else:
+            print(f"spec decode k={eng.spec_k} "
+                  f"({eng.config.resolved_drafter}): "
+                  f"{st['spec_verify_segments']} verify segments, "
+                  f"{st['spec_accepted_tokens']}/"
+                  f"{st['spec_proposed_tokens']} drafts accepted "
+                  f"({rate:.0%} acceptance, "
+                  f"{st['spec_accepted_per_verify']:.2f} committed "
+                  f"tokens/verify)")
     if eng.prefix_caching:
         total_prompt = sum(r.prompt_len for r in done)
         print(f"prefix caching: {kv['prefix_hit_tokens']} prompt tokens "

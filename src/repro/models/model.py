@@ -388,6 +388,13 @@ def forward_packed(cfg: ModelConfig, params: dict, tokens: jax.Array,
     Both are traced operands of static shape, so the compile-cache bound
     above is unchanged.
 
+    Speculative verify segments (DESIGN.md §13) need no support here at
+    all: a slot's k+1 verify positions are just a k+1-token segment, and
+    ``token_pos`` / ``token_wpos`` / ``token_dst`` are already traced
+    operands — the engine rewrites them on device (true positions from the
+    rolled-back ``cache_len`` chain) before calling this function, and the
+    segment-causal mask above *is* the draft/verify factorization.
+
     Returns (logits (1, T, vocab[, K]), new_cache).
     """
     x = _embed(cfg, params, tokens)

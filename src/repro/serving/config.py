@@ -63,6 +63,14 @@ class EngineConfig:
     kv_bucketing: bool = True
     # ---- cross-request prefix caching (DESIGN.md §12) -----------------------
     prefix_caching: bool = False
+    # ---- speculative decoding (DESIGN.md §13) -------------------------------
+    # draft tokens verified per decoding slot per iteration; 0 disables
+    # (each decode segment is then the plain single token of §8/§10)
+    spec_k: int = 0
+    drafter: Optional[str] = None            # None -> "ngram" when spec_k > 0
+    # ---- sampling (packed step; greedy when temperature == 0) ---------------
+    temperature: float = 0.0
+    top_k: Optional[int] = None
     # ---- attention toggles (§Perf HC3; None -> env fallback) ----------------
     attn_fast: Optional[bool] = None
     attn_stream: Optional[bool] = None
@@ -90,6 +98,21 @@ class EngineConfig:
                 "prefix caching (DESIGN.md §12) requires the packed step"
             assert self.max_len % self.kv_block_size == 0, \
                 (self.max_len, self.kv_block_size)
+        assert self.spec_k >= 0, self.spec_k
+        if self.spec_k > 0:
+            assert step == "packed", \
+                "speculative decoding (DESIGN.md §13) requires the packed step"
+            assert self.spec_k < self.max_len, (self.spec_k, self.max_len)
+        if self.drafter is not None:
+            from repro.serving.draft import drafter_names
+            assert self.drafter in drafter_names(), \
+                (self.drafter, drafter_names())
+        assert self.temperature >= 0.0, self.temperature
+        if self.top_k is not None:
+            assert self.top_k >= 1, self.top_k
+            assert self.temperature > 0, \
+                "top_k sampling needs temperature > 0 (temperature == 0 " \
+                "is greedy and ignores top_k)"
 
     # ---- defaulting rules (never baked into the stored fields) --------------
     @property
@@ -107,6 +130,14 @@ class EngineConfig:
         # the pipeline is the default serving mode (§5.3 / DESIGN.md §10);
         # the legacy step has no deferred-sync path
         return 1 if self.resolved_step_mode == "packed" else 0
+
+    @property
+    def resolved_drafter(self) -> Optional[str]:
+        """The drafter name to instantiate: explicit value, else the n-gram
+        reference drafter whenever speculation is on."""
+        if self.spec_k <= 0:
+            return None
+        return self.drafter if self.drafter is not None else "ngram"
 
     def resolved_attn_fast(self) -> bool:
         """Explicit value, else one env read — call once at construction."""
@@ -173,6 +204,19 @@ class EngineConfig:
         ap.add_argument("--kv-block-size", type=int, default=cls.kv_block_size,
                         help="KV block size (tokens per block-table block; "
                              "must divide --max-len when --prefix-caching)")
+        ap.add_argument("--spec-k", type=int, default=cls.spec_k,
+                        help="speculative decoding (DESIGN.md §13): draft "
+                             "tokens verified per decoding slot per packed "
+                             "iteration; 0 = off")
+        ap.add_argument("--drafter", default=None,
+                        choices=["ngram"],
+                        help="draft proposer for --spec-k > 0 (default: "
+                             "ngram prompt-lookup/self-history matching)")
+        ap.add_argument("--temperature", type=float, default=cls.temperature,
+                        help="sampling temperature (0 = greedy, the default "
+                             "and the spec-decode exactness baseline)")
+        ap.add_argument("--top-k", type=int, default=None,
+                        help="top-k sampling cutoff (needs --temperature > 0)")
         ap.add_argument("--attn-fast", action=argparse.BooleanOptionalAction,
                         default=None,
                         help="no-upcast attention refs (§Perf HC3); default: "
@@ -195,6 +239,10 @@ class EngineConfig:
             kv_bucketing=not ns.no_kv_bucketing,
             prefix_caching=ns.prefix_caching,
             kv_block_size=ns.kv_block_size,
+            spec_k=ns.spec_k,
+            drafter=ns.drafter,
+            temperature=ns.temperature,
+            top_k=ns.top_k,
             attn_fast=ns.attn_fast,
             attn_stream=ns.attn_stream,
         )

@@ -87,10 +87,11 @@ from repro.kernels import ops
 from repro.launch.mesh import make_tp_mesh
 from repro.models import blocks
 from repro.models import model as model_lib
+from repro.serving import draft as draft_lib
 from repro.serving import sampling
 from repro.serving.config import EngineConfig
 from repro.serving.kvcache import PagedKVManager
-from repro.serving.request import Request
+from repro.serving.request import Request, State
 from repro.serving.scheduler import BatchPlan, GlobalBatchScheduler
 
 
@@ -155,6 +156,13 @@ class EngineStats:
     # modeled TP collective traffic (DESIGN.md §11; ring all-reduce wire
     # bytes per tp_lib.collective_bytes_per_iter) — 0 at tp=1
     tp_collective_bytes: int = 0
+    # speculative decoding (DESIGN.md §13): drafts launched into verify
+    # segments, drafts the target model accepted, and verify segments
+    # retired — acceptance is counted at retire time (device truth), so
+    # decode_tokens stays the committed-token trajectory
+    spec_proposed_tokens: int = 0
+    spec_accepted_tokens: int = 0
+    spec_verify_segments: int = 0
 
     @property
     def total_tokens(self) -> int:
@@ -191,9 +199,23 @@ class EngineStats:
         return self.tp_collective_bytes / self.iterations \
             if self.iterations else 0.0
 
+    @property
+    def spec_acceptance_rate(self) -> float:
+        """Fraction of launched draft tokens the target model accepted."""
+        return self.spec_accepted_tokens / self.spec_proposed_tokens \
+            if self.spec_proposed_tokens else 0.0
+
+    @property
+    def spec_accepted_per_verify(self) -> float:
+        """Committed tokens per verify segment (the base sample plus
+        accepted drafts): > 1 means speculation beats one-token decode."""
+        return (self.spec_accepted_tokens + self.spec_verify_segments) \
+            / self.spec_verify_segments if self.spec_verify_segments else 0.0
+
     _DERIVED = ("total_tokens", "throughput", "prefill_expansion",
                 "dispatches_per_iter", "syncs_per_iter",
-                "blocking_syncs_per_iter", "tp_collective_bytes_per_iter")
+                "blocking_syncs_per_iter", "tp_collective_bytes_per_iter",
+                "spec_acceptance_rate", "spec_accepted_per_verify")
 
     def snapshot(self) -> dict:
         """Common stats schema (same contract as ``KVStats.snapshot``):
@@ -211,10 +233,13 @@ class EngineStats:
 @dataclasses.dataclass
 class _InFlight:
     """One launched-but-unretired packed iteration (DESIGN.md §10): the
-    deferred device→host sync is the ``tokens`` handle."""
+    deferred device→host sync is the ``tokens`` handle — the per-slot
+    payload ``(max_slots, W + 1)`` of token ring ‖ accept_len (§13), one
+    transfer per iteration regardless of speculation width."""
     plan: BatchPlan
-    sample_at: list              # (rid, stream index) pairs
-    tokens: jax.Array            # sampled-token handle, not yet transferred
+    sample_at: list              # (rid, slot, kind) triples; kind is
+    #                              "decode" | "verify" | "prefill"
+    tokens: jax.Array            # payload handle, not yet transferred
 
 
 def _to_token(v) -> int:
@@ -237,6 +262,8 @@ class ServeEngine:
         "kv_buckets": "kv_buckets", "kv_bucketing": "kv_bucketing",
         "prefix_caching": "prefix_caching", "attn_fast": "attn_fast",
         "attn_stream": "attn_stream", "seed": "seed",
+        "spec_k": "spec_k", "drafter": "drafter",
+        "temperature": "temperature", "top_k": "top_k",
     }
 
     def __init__(self, cfg: ModelConfig, params,
@@ -329,24 +356,51 @@ class ServeEngine:
                                  bytes_per_token=kv_bytes,
                                  avg_decode_len=config.avg_decode_len,
                                  prefix_caching=self.prefix_caching)
+        # speculative decoding (DESIGN.md §13): each decoding slot launches
+        # a spec_k+1-token verify segment; acceptance/rollback happen
+        # on-device, so the mode needs attention-only models — rejected
+        # positions just stay unattended cache rows, whereas a recurrent
+        # mixer's per-slot state would already have advanced through them
+        self.spec_k = int(config.spec_k)
+        if self.spec_k:
+            assert all(s.mixer == ATTN for s in cfg.layer_specs()), \
+                "speculative decoding (DESIGN.md §13) needs attention-only " \
+                "models (recurrent state cannot roll back rejected positions)"
+        self.drafter = (draft_lib.make_drafter(config.resolved_drafter)
+                        if self.spec_k else None)
+        # packed-step sampling (greedy when temperature == 0 — the default
+        # and the spec-decode exactness baseline)
+        self.temperature = float(config.temperature)
+        self.top_k = config.top_k
         self.scheduler = GlobalBatchScheduler(
             self.kv, discrete_sizes=config.discrete_sizes,
             max_active=config.max_slots, kv_buckets=self.kv_buckets,
-            max_request_len=self.max_len)
+            max_request_len=self.max_len, spec_k=self.spec_k,
+            drafter=self.drafter)
 
         # slot caches: model cache trees with leading batch = max_slots
         self.cache = model_lib.init_cache(cfg, 1, self.max_slots, self.max_len)
         self.cache_len = jnp.zeros((self.max_slots,), jnp.int32)
-        # device-resident sampled-token feedback (DESIGN.md §10): the packed
-        # program scatters each sample point's token here and gathers the
-        # next iteration's decode inputs from it, so the host never needs a
-        # result transfer to form the next input stream (multi-codebook
-        # frontends keep codebook 0, matching the host feedback path)
-        self.last_token = jnp.zeros((self.max_slots,), jnp.int32)
+        # device-resident sampled-token feedback (DESIGN.md §10), generalized
+        # to the per-slot token ring (§13): row = the W = spec_k+1 samples of
+        # the slot's last verify segment, of which the first accept_len were
+        # accepted.  The packed program scatters each sample point's tokens
+        # here and gathers the next iteration's decode inputs from
+        # ring[slot, accept_len-1] *in-program*, so accepted tokens never
+        # touch the host to form the next input stream (multi-codebook
+        # frontends keep codebook 0, matching the host feedback path).
+        # W = 1 collapses exactly to the §10 single-token buffer.
+        self.last_token = jnp.zeros((self.max_slots, self.spec_k + 1),
+                                    jnp.int32)
+        self.accept_len = jnp.ones((self.max_slots,), jnp.int32)
         self.slot_free = list(range(self.max_slots))
         self.stats = EngineStats()
         # host mirror of each slot's context length (packed step builds its
-        # per-token positions from this without any device read)
+        # per-token positions from this without any device read).  With
+        # speculation this is the *upper bound* — every verify launch
+        # advances it by W; retire resyncs it to the committed truth
+        # (total_tokens - 1 + inflight), so it never drifts past what the
+        # scheduler's worst-case KV accounting already covers
         self._pos = np.zeros((self.max_slots,), np.int64)
 
         # fresh one-slot cache, scattered into a slot on (re)assignment so a
@@ -375,6 +429,7 @@ class ServeEngine:
             rep = NamedSharding(self._mesh, P())
             self.cache_len = jax.device_put(self.cache_len, rep)
             self.last_token = jax.device_put(self.last_token, rep)
+            self.accept_len = jax.device_put(self.accept_len, rep)
 
         # one compiled program per (bucketed launch length T, kv bucket) —
         # the compile cache is bounded by |discrete dense sizes| × |kv
@@ -385,8 +440,8 @@ class ServeEngine:
         # trace axes, so the compile-cache bound is preserved per mesh
         if self.tp == 1:
             self._packed_step = jax.jit(self._packed_impl,
-                                        donate_argnums=(1, 9),
-                                        static_argnums=(14,))
+                                        donate_argnums=(1, 8, 9),
+                                        static_argnums=(16,))
         else:
             self._packed_step = self._build_packed_tp_step()
         # block-table operands (DESIGN.md §12) are traced arrays of static
@@ -452,52 +507,130 @@ class ServeEngine:
 
     # ---- jitted token-packed step (one dispatch per iteration) --------------
     def _packed_impl(self, params, cache, tokens, token_slot, token_pos,
-                     token_wpos, token_active, cache_len, reset, last_token,
-                     from_last, sample_slot, token_dst, block_tables,
-                     kv_bucket):
+                     token_active, cache_len, reset, last_token, accept_len,
+                     from_last, sample_slot, verify_idx, token_rid, token_dst,
+                     block_tables, kv_bucket):
         """tp=1 entry: the packed body with the fresh-slot cache closed over
         (the TP entry passes it as a shard_map operand instead)."""
         return self._packed_core(params, cache, tokens, token_slot, token_pos,
-                                 token_wpos, token_active, cache_len, reset,
-                                 last_token, from_last, sample_slot,
-                                 token_dst, block_tables, self._slot_init,
-                                 kv_bucket)
+                                 token_active, cache_len, reset, last_token,
+                                 accept_len, from_last, sample_slot,
+                                 verify_idx, token_rid, token_dst,
+                                 block_tables, self._slot_init, kv_bucket)
 
     def _packed_core(self, params, cache, tokens, token_slot, token_pos,
-                     token_wpos, token_active, cache_len, reset, last_token,
-                     from_last, sample_slot, token_dst, block_tables,
-                     slot_init, kv_bucket):
+                     token_active, cache_len, reset, last_token, accept_len,
+                     from_last, sample_slot, verify_idx, token_rid, token_dst,
+                     block_tables, slot_init, kv_bucket):
         """The whole iteration as one program (DESIGN.md §8): reset reused
         slots' recurrent state, substitute the stream's decode placeholders
-        with the device-resident ``last_token`` buffer (§10 — the previous
+        with the device-resident token ring (§10/§13 — the previous
         iteration's samples never round-trip through the host), run the
-        packed multi-segment forward, sample greedily on-device, scatter
-        the samples back into ``last_token`` at the stream's sample points,
-        and advance ``cache_len`` from the per-token metadata — so the only
-        device→host transfer is the sampled tokens, and even that one is
-        deferrable (``async_depth``).  ``kv_bucket`` is static (DESIGN.md
-        §9): attention sweeps only that many cache rows per slot, so the
-        program's attention cost tracks the iteration's actual context, not
-        ``max_len``.  Under TP this exact body runs inside ``shard_map``
-        (DESIGN.md §11) with a ``tp_ctx`` active, so the mixer families'
-        reduction points become real collectives."""
+        packed multi-segment forward, sample on-device (greedy by default),
+        scatter the samples back into the ring at the stream's sample
+        points, and advance ``cache_len`` from the per-token metadata — so
+        the only device→host transfer is the per-slot payload (ring ‖
+        accept_len), and even that one is deferrable (``async_depth``).
+
+        With speculation (``spec_k > 0``, DESIGN.md §13) each decoding
+        slot's row of ``verify_idx`` names its W = spec_k+1 stream
+        positions.  Their true positions are computed HERE from the donated
+        ``cache_len`` chain (``base + 0..k``), overwriting the host's
+        worst-case values — that is what lets the host launch iteration
+        i+1 before it knows how many of iteration i's drafts were
+        accepted.  Acceptance is exact prefix matching (greedy) /
+        sample-and-compare rejection sampling (stochastic, point-mass
+        drafter): draft j is accepted iff it equals the target sample at
+        position j-1; the committed run is the base sample plus the
+        accepted prefix, ``accept_len = accepted + 1``, and ``cache_len``
+        advances by exactly that (the on-device rollback — rejected
+        positions' KV rows sit above the new length and are overwritten by
+        the next verify segment before anything attends them).
+
+        ``kv_bucket`` is static (DESIGN.md §9): attention sweeps only that
+        many cache rows per slot, so the program's attention cost tracks
+        the iteration's actual context, not ``max_len``.  Under TP this
+        exact body runs inside ``shard_map`` (DESIGN.md §11) with a
+        ``tp_ctx`` active, so the mixer families' reduction points become
+        real collectives."""
         cache = self._reset_recurrent(cache, reset, slot_init)
+        W = self.spec_k + 1
+        T = token_slot.shape[0]
+        pos = token_pos
+        if self.spec_k:
+            # device-true verify positions: segment j writes cache_len + j
+            vpos = cache_len[:, None] + jnp.arange(W, dtype=jnp.int32)[None, :]
+            pos = pos.at[verify_idx.reshape(-1)].set(
+                vpos.reshape(-1).astype(pos.dtype), mode="drop")
+            is_verify = jnp.zeros((T,), bool).at[
+                verify_idx.reshape(-1)].set(True, mode="drop")
+            verify_on = verify_idx[:, 0] < T            # (max_slots,)
+        token_wpos = jnp.where(token_active, pos, self.max_len) \
+            .astype(jnp.int32)
         toks = sampling.substitute_last(tokens, last_token, token_slot,
-                                        from_last)
+                                        from_last, accept_len=accept_len)
+        if self.prefix_caching and self.spec_k:
+            # verify write targets follow the device-true positions through
+            # the slot's block table (the host left them OOB)
+            bs = self.kv.page_size
+            blk = block_tables[token_slot,
+                               jnp.minimum(pos // bs, self._nb_cols - 1)]
+            vdst = blk.astype(token_dst.dtype) * bs + pos % bs
+            token_dst = jnp.where(is_verify & token_active, vdst, token_dst)
         with ops.attn_config(fast=self.attn_fast, stream=self.attn_stream):
             # self.prefix_caching is a python constant per engine, so the
             # non-prefix trace never sees the (dummy) block operands at all
             logits, new_cache = model_lib.forward_packed(
-                self.cfg, params, toks, cache, token_slot, token_pos,
+                self.cfg, params, toks, cache, token_slot, pos,
                 token_wpos, token_active, kv_bucket=kv_bucket,
                 token_dst=token_dst if self.prefix_caching else None,
                 block_tables=block_tables if self.prefix_caching else None)
-        next_tok = sampling.greedy(logits[0])
-        new_last = sampling.scatter_last(last_token, sample_slot, next_tok)
+        if self.temperature > 0:
+            # keys fold (rid, pos) ONLY — launch-index and slot independent
+            # (sampling.packed_keys), so stochastic serving replays exactly
+            # and §13 re-verifies of a rejected position repeat the same
+            # draw (point-mass speculation stays token-exact)
+            keys = sampling.packed_keys(self.key, token_rid, pos,
+                                        self.max_len + 1)
+            next_tok = sampling.sample_tokens(logits[0], keys,
+                                              self.temperature, self.top_k)
+        else:
+            next_tok = sampling.greedy(logits[0])
+        # multi-codebook frontends keep codebook 0 (the one rule, §10)
+        tok0 = next_tok if next_tok.ndim == 1 else next_tok[:, 0]
         new_len = jnp.where(reset, 0, cache_len)
-        new_len = new_len.at[token_slot].max(
-            jnp.where(token_active, token_pos + 1, 0))
-        return next_tok, new_cache, new_len, new_last
+        if self.spec_k:
+            in0 = toks[0] if toks.ndim == 2 else toks[0, :, 0]
+            # per verify slot: the W inputs and W target samples of its
+            # segment (fill values never match each other on OOB rows)
+            seg_in = jnp.take(in0.astype(jnp.int32), verify_idx, axis=0,
+                              mode="fill", fill_value=-1)
+            seg_out = jnp.take(tok0, verify_idx, axis=0, mode="fill",
+                               fill_value=-2)
+            # draft j (input j) is accepted iff it equals target sample
+            # j-1; the accepted run is the longest matching prefix
+            match = (seg_in[:, 1:] == seg_out[:, :-1]).astype(jnp.int32)
+            acc = jnp.cumprod(match, axis=1).sum(axis=1)
+            n_acc = jnp.where(verify_on, acc + 1, accept_len)
+            new_ring = jnp.where(verify_on[:, None], seg_out, last_token)
+            nv = token_active & ~is_verify
+            new_len = new_len.at[token_slot].max(jnp.where(nv, pos + 1, 0))
+            # the §13 rollback: verify slots advance by the accepted count
+            # only; rejected rows sit above new_len, overwritten next launch
+            new_len = jnp.where(verify_on, cache_len + acc + 1, new_len)
+        else:
+            n_acc = accept_len
+            new_ring = last_token
+            new_len = new_len.at[token_slot].max(
+                jnp.where(token_active, pos + 1, 0))
+        # single-sample points (prefill-final; every decode at spec_k=0)
+        # write ring column 0 with accept_len 1
+        new_ring = new_ring.at[sample_slot, 0].set(
+            tok0.astype(new_ring.dtype), mode="drop")
+        n_acc = n_acc.at[sample_slot].set(1, mode="drop")
+        payload = jnp.concatenate(
+            [new_ring, n_acc[:, None].astype(new_ring.dtype)], axis=1)
+        return payload, new_cache, new_len, new_ring, n_acc
 
     def _build_packed_tp_step(self):
         """jit(shard_map(packed body)) over the 1-D TP mesh (DESIGN.md
@@ -512,42 +645,48 @@ class ServeEngine:
         param_specs = tp_lib.param_pspecs_tp(self.cfg)
         cache_specs = tp_lib.cache_pspecs_tp(self.cfg)
         rep = P()
-        # token_dst / block_tables ride as replicated operands: the cache
-        # leaves shard on head/channel axes only, so block ids (flat
-        # (slot, seq) rows / block size) are shard-local and identical on
-        # every shard (DESIGN.md §12)
-        in_specs = (param_specs, cache_specs) + (rep,) * 12 + (cache_specs,)
-        out_specs = (rep, cache_specs, rep, rep)
+        # token_dst / block_tables / verify_idx ride as replicated
+        # operands: the cache leaves shard on head/channel axes only, so
+        # block ids (flat (slot, seq) rows / block size) and stream indices
+        # are shard-local and identical on every shard (DESIGN.md §12/§13)
+        in_specs = (param_specs, cache_specs) + (rep,) * 14 + (cache_specs,)
+        out_specs = (rep, cache_specs, rep, rep, rep)
 
-        def entry(params, cache, tokens, token_slot, token_pos, token_wpos,
-                  token_active, cache_len, reset, last_token, from_last,
-                  sample_slot, token_dst, block_tables, slot_init, kv_bucket):
+        def entry(params, cache, tokens, token_slot, token_pos,
+                  token_active, cache_len, reset, last_token, accept_len,
+                  from_last, sample_slot, verify_idx, token_rid, token_dst,
+                  block_tables, slot_init, kv_bucket):
             def body(params, cache, tokens, token_slot, token_pos,
-                     token_wpos, token_active, cache_len, reset, last_token,
-                     from_last, sample_slot, token_dst, block_tables,
-                     slot_init):
+                     token_active, cache_len, reset, last_token, accept_len,
+                     from_last, sample_slot, verify_idx, token_rid,
+                     token_dst, block_tables, slot_init):
                 nano = nano_batch_sizes_for(tokens.shape[1], self.nano).sizes
                 with tp_lib.tp_ctx("model", self.tp, nano):
                     return self._packed_core(
                         params, cache, tokens, token_slot, token_pos,
-                        token_wpos, token_active, cache_len, reset,
-                        last_token, from_last, sample_slot, token_dst,
-                        block_tables, slot_init, kv_bucket)
+                        token_active, cache_len, reset, last_token,
+                        accept_len, from_last, sample_slot, verify_idx,
+                        token_rid, token_dst, block_tables, slot_init,
+                        kv_bucket)
             return shard_map_compat(body, mesh, in_specs, out_specs,
                                     check=False)(
-                params, cache, tokens, token_slot, token_pos, token_wpos,
-                token_active, cache_len, reset, last_token, from_last,
-                sample_slot, token_dst, block_tables, slot_init)
+                params, cache, tokens, token_slot, token_pos, token_active,
+                cache_len, reset, last_token, accept_len, from_last,
+                sample_slot, verify_idx, token_rid, token_dst, block_tables,
+                slot_init)
 
-        jitted = jax.jit(entry, donate_argnums=(1, 9), static_argnums=(15,))
+        jitted = jax.jit(entry, donate_argnums=(1, 8, 9),
+                         static_argnums=(17,))
 
-        def step(params, cache, tokens, token_slot, token_pos, token_wpos,
-                 token_active, cache_len, reset, last_token, from_last,
-                 sample_slot, token_dst, block_tables, kv_bucket):
+        def step(params, cache, tokens, token_slot, token_pos, token_active,
+                 cache_len, reset, last_token, accept_len, from_last,
+                 sample_slot, verify_idx, token_rid, token_dst, block_tables,
+                 kv_bucket):
             return jitted(params, cache, tokens, token_slot, token_pos,
-                          token_wpos, token_active, cache_len, reset,
-                          last_token, from_last, sample_slot, token_dst,
-                          block_tables, self._slot_init, kv_bucket)
+                          token_active, cache_len, reset, last_token,
+                          accept_len, from_last, sample_slot, verify_idx,
+                          token_rid, token_dst, block_tables,
+                          self._slot_init, kv_bucket)
 
         step._cache_size = jitted._cache_size
         return step
@@ -602,9 +741,12 @@ class ServeEngine:
         # a slot holds max_len positions; without this clamp a request with
         # prompt_len + max_new_tokens > max_len decodes past the cache and
         # trips the kv-bucket bound mid-run (admission only checks pool
-        # capacity, not per-slot extent)
-        req.max_new_tokens = min(req.max_new_tokens,
-                                 max(self.max_len - req.prompt_len, 0))
+        # capacity, not per-slot extent).  Speculation reserves spec_k
+        # extra rows of slack: a verify segment launched at the cap still
+        # writes its (possibly rejected) draft positions (§13)
+        req.max_new_tokens = min(
+            req.max_new_tokens,
+            max(self.max_len - req.prompt_len - self.spec_k, 0))
         self.scheduler.submit(req)
 
     @property
@@ -674,16 +816,43 @@ class ServeEngine:
 
     # ---- packed iteration: one dispatch, one (deferred) host sync -----------
     def _retire_oldest(self) -> list[Request]:
-        """Transfer the oldest in-flight iteration's sampled tokens (the
-        deferred sync — blocking only if the device hasn't caught up),
-        commit them to the scheduler, and finalize whatever finished."""
+        """Transfer the oldest in-flight iteration's payload (the deferred
+        sync — blocking only if the device hasn't caught up), commit its
+        tokens to the scheduler, and finalize whatever finished.  The
+        payload row for a verify slot is its token ring ‖ accept_len: the
+        first ``accept_len`` ring entries are the committed run (§13);
+        other sample points read ring column 0 (their accept_len is 1)."""
         inf = self._ring.popleft()
-        nt = self._fetch(inf.tokens)
+        payload = self._fetch(inf.tokens)        # (max_slots, W + 1)
         t1 = time.perf_counter()
-        sampled = {rid: _to_token(nt[idx]) for rid, idx in inf.sample_at}
+        W = self.spec_k + 1
+        sampled: dict[int, object] = {}
+        for rid, s, kind in inf.sample_at:
+            if kind == "verify":
+                n_acc = int(min(max(payload[s, W], 1), W))
+                sampled[rid] = [int(x) for x in payload[s, :n_acc]]
+                self.stats.spec_verify_segments += 1
+                self.stats.spec_proposed_tokens += self.spec_k
+                self.stats.spec_accepted_tokens += n_acc - 1
+                # launch counted the guaranteed base sample; add the rest
+                self.stats.decode_tokens += n_acc - 1
+            else:
+                sampled[rid] = int(payload[s, 0])
         finished = self.scheduler.commit(inf.plan, sampled, t1)
         for r in finished:
             self._finalize(r)
+        if self.spec_k:
+            # resync the host position upper bound to the committed truth:
+            # each launch advanced _pos by the worst case W while the
+            # device advanced by the accepted count — without this the
+            # bound would drift one rejected-draft's worth per commit.
+            # (total_tokens - 1) is the device cache_len after this commit
+            # with nothing in flight; each still-in-flight launch adds at
+            # most its worst case, which `inflight` counts exactly.
+            for r in inf.plan.decode:
+                if r.slot >= 0 and r.state not in (State.FINISHED,
+                                                   State.DISCARDED):
+                    self._pos[r.slot] = r.total_tokens - 1 + r.inflight
         self.stats.host_time += time.perf_counter() - t1
         return finished
 
@@ -703,6 +872,7 @@ class ServeEngine:
     def _launch_packed(self, plan: BatchPlan) -> _InFlight:
         t_host = time.perf_counter()
         packed = self.scheduler.pack(plan, nano=self.nano)
+        W = self.spec_k + 1
         reset = np.zeros((self.max_slots,), bool)
         for seg in packed.segments:
             r = seg.req
@@ -715,28 +885,37 @@ class ServeEngine:
         bs = self.kv.page_size
         oob = self.max_slots * self.max_len
         if self.prefix_caching:
-            # decode writes land at pos = _pos[slot] (not yet advanced):
-            # grow each decoding request's block table NOW, launch-side, so
-            # the write target exists before the (possibly deferred-commit)
+            # decode writes land at pos = _pos[slot] .. _pos[slot]+W-1 (not
+            # yet advanced; the worst case under speculation): grow each
+            # decoding request's block table NOW, launch-side, so the write
+            # targets exist before the (possibly deferred-commit)
             # ``extend`` ever runs (DESIGN.md §12)
             for seg in packed.segments:
                 if seg.is_decode:
                     self.kv.ensure(seg.req.rid,
-                                   int(self._pos[seg.req.slot]) + 1)
+                                   int(self._pos[seg.req.slot]) + W)
 
         t_total = packed.launch_tokens
         tokens = np.zeros((t_total,), np.int32)
         slot = np.zeros((t_total,), np.int32)
         pos = np.zeros((t_total,), np.int32)
         active = np.zeros((t_total,), bool)
-        # decode positions take last_token[slot] on device (§10): the host
-        # writes a placeholder and never needs the sampled value
+        # decode positions take the ring's newest accepted token on device
+        # (§10/§13): the host writes a placeholder and never needs the
+        # sampled value
         from_last = np.zeros((t_total,), bool)
         # block-table operands (prefix mode): per-token flat scatter target
         # (OOB = dropped write, covers padding) and per-slot block tables
         token_dst = np.full((t_total,), oob, np.int64)
         tables_arr = np.zeros((self.max_slots, self._nb_cols), np.int32)
-        sample_at: list[tuple[int, int]] = []      # (rid, stream index)
+        # per-slot verify stream positions (§13); OOB rows (== t_total)
+        # mark slots with no verify segment this iteration
+        verify_idx = np.full((self.max_slots, W), t_total, np.int32)
+        # per-token request id: the stochastic sampler's PRNG identity
+        # (sampling.packed_keys folds (rid, pos) — slot- and
+        # launch-independent); dead under greedy
+        rid_arr = np.zeros((t_total,), np.int32)
+        sample_at: list[tuple[int, int, str]] = []   # (rid, slot, kind)
         t = 0
         for seg in packed.segments:
             r = seg.req
@@ -749,16 +928,24 @@ class ServeEngine:
                 # gather table only needs the addressable prefix
                 nb = min(len(tbl), self._nb_cols)
                 tables_arr[r.slot, :nb] = tbl[:nb]
+            rid_arr[t:t + seg.length] = r.rid & 0x7fffffff
             if seg.is_decode:
                 from_last[t] = True
-                slot[t] = r.slot
+                slot[t:t + W] = r.slot
                 p = int(self._pos[r.slot])
-                pos[t] = p
-                active[t] = True
-                if tbl is not None and p // bs < len(tbl):
-                    token_dst[t] = tbl[p // bs] * bs + p % bs
-                sample_at.append((r.rid, t))
-                t += 1
+                # host positions are the worst-case bound; with spec_k > 0
+                # the program recomputes the true ones from cache_len
+                pos[t:t + W] = p + np.arange(W)
+                active[t:t + W] = True
+                if self.spec_k:
+                    tokens[t + 1:t + W] = seg.draft
+                    verify_idx[r.slot] = np.arange(t, t + W)
+                    sample_at.append((r.rid, r.slot, "verify"))
+                else:
+                    if tbl is not None and p // bs < len(tbl):
+                        token_dst[t] = tbl[p // bs] * bs + p % bs
+                    sample_at.append((r.rid, r.slot, "decode"))
+                t += W
             else:
                 ln = seg.length
                 tokens[t:t + ln] = r.prompt[seg.offset:seg.offset + ln]
@@ -772,19 +959,27 @@ class ServeEngine:
                         cov, tbl[np.minimum(qs // bs, len(tbl) - 1)] * bs
                         + qs % bs, oob)
                 if seg.offset + ln == r.prompt_len:
-                    sample_at.append((r.rid, t + ln - 1))
+                    sample_at.append((r.rid, r.slot, "prefill"))
                 t += ln
         assert t == packed.tokens, (t, packed.tokens)
-        # padding tokens write out of bounds -> the scatter drops them
-        wpos = np.where(active, pos, self.max_len).astype(np.int32)
-        # sample points scatter into last_token[slot]; non-sample positions
-        # write out of bounds -> dropped
+        # single-sample points scatter into ring column 0; non-sample
+        # positions write out of bounds -> dropped.  Verify segments are
+        # NOT sample points — their whole row lands via the acceptance path
         sample_slot = np.full((t_total,), self.max_slots, np.int32)
-        for _rid, idx in sample_at:
-            sample_slot[idx] = slot[idx]
+        t = 0
+        for seg in packed.segments:
+            if seg.is_decode:
+                if not self.spec_k:
+                    sample_slot[t] = seg.req.slot
+                t += W
+            else:
+                if seg.offset + seg.length == seg.req.prompt_len:
+                    sample_slot[t + seg.length - 1] = seg.req.slot
+                t += seg.length
 
         # iteration's KV-length bucket (DESIGN.md §9): every attended row
         # must sit below it — the scheduler quantized the max extent up
+        # (host pos is the §13 worst case, so the check stays sufficient)
         kv_bucket = packed.kv_bucket if packed.kv_bucket is not None \
             else self.max_len
         assert not active.any() or int(pos[active].max()) < kv_bucket, \
@@ -806,13 +1001,15 @@ class ServeEngine:
         n_decode = 0
         for seg in packed.segments:
             if seg.is_decode:
-                self._pos[seg.req.slot] += 1
+                self._pos[seg.req.slot] += W
                 n_decode += 1
             else:
                 self._pos[seg.req.slot] = seg.offset + seg.length
+        # count the guaranteed base sample per decode/verify segment here;
+        # accepted drafts are added at retire time (device truth)
         self.stats.decode_tokens += n_decode
-        self.stats.prefill_tokens += packed.tokens - n_decode
-        self.stats.prefill_model_tokens += packed.tokens - n_decode
+        self.stats.prefill_tokens += packed.tokens - n_decode * W
+        self.stats.prefill_model_tokens += packed.tokens - n_decode * W
         self.stats.packed_pad_tokens += packed.padding
         if self.prefix_caching:
             dst_op = jnp.asarray(token_dst.astype(np.int32))
@@ -827,16 +1024,17 @@ class ServeEngine:
             dst_op, tbl_op = self._dummy_dst, self._dummy_blk
         t_disp = time.perf_counter()
         self.stats.host_time += t_disp - t_host
-        next_tok, self.cache, self.cache_len, self.last_token = \
-            self._packed_step(
+        payload, self.cache, self.cache_len, self.last_token, \
+            self.accept_len = self._packed_step(
                 self.params, self.cache, tok_in, jnp.asarray(slot),
-                jnp.asarray(pos), jnp.asarray(wpos), jnp.asarray(active),
-                self.cache_len, jnp.asarray(reset), self.last_token,
-                jnp.asarray(from_last), jnp.asarray(sample_slot), dst_op,
-                tbl_op, kv_bucket)
+                jnp.asarray(pos), jnp.asarray(active), self.cache_len,
+                jnp.asarray(reset), self.last_token, self.accept_len,
+                jnp.asarray(from_last), jnp.asarray(sample_slot),
+                jnp.asarray(verify_idx), jnp.asarray(rid_arr),
+                dst_op, tbl_op, kv_bucket)
         self.stats.dispatch_time += time.perf_counter() - t_disp
         self.stats.model_dispatches += 1
-        return _InFlight(plan=plan, sample_at=sample_at, tokens=next_tok)
+        return _InFlight(plan=plan, sample_at=sample_at, tokens=payload)
 
     # ---- legacy iteration: decode dispatch + one dispatch per chunk ---------
     def _step_legacy(self, plan: BatchPlan) -> dict[int, int]:

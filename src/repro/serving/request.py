@@ -38,7 +38,10 @@ class Request:
     # sampled tokens launched but not yet committed: in-flight decode tokens
     # plus the prefill-final token.  Planning bounds generation with
     # ``len(output) + inflight`` so speculation never launches past
-    # ``max_new_tokens``, and caps post-EOS overshoot at one in-flight token
+    # ``max_new_tokens``, and caps post-EOS overshoot at one in-flight token.
+    # Under §13 spec decoding this counts *worst-case* tokens — each verify
+    # segment adds its full width ``spec_k + 1`` at launch and commit
+    # reconciles down to the actual accept_len, so the bound stays safe
     inflight: int = 0
 
     @property

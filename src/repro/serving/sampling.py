@@ -1,6 +1,8 @@
 """Token samplers (jit-compatible)."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
@@ -26,20 +28,79 @@ def top_k(logits: jax.Array, key: jax.Array, k: int = 50,
 
 
 # ---------------------------------------------------------------------------
-# device-resident sampled-token feedback (async pipeline, DESIGN.md §10)
+# packed-step sampling (EngineConfig.temperature / top_k; DESIGN.md §13)
+# ---------------------------------------------------------------------------
+def packed_keys(key: jax.Array, token_rid: jax.Array, token_pos: jax.Array,
+                stride: int) -> jax.Array:
+    """Per-token PRNG keys for the packed stream: fold each token's
+    ``(request id, position)`` into the engine key, so every sample point
+    draws a stream that depends on nothing else — not the launch index,
+    not the physical slot, not previously sampled values.  Consequences:
+    stochastic serving is exactly reproducible, identical at any
+    ``async_depth`` (slot reuse timing shifts under the §10 pipeline;
+    request ids don't), and a §13 verify re-draw of a rejected position
+    repeats the *same* sample — which makes point-mass-drafter speculation
+    token-exact against the plain engine even under temperature/top-k
+    sampling (common random numbers).  ``stride`` must exceed the max
+    position (``max_len``) so (rid, pos) pairs never collide."""
+    return jax.vmap(lambda r, p: jax.random.fold_in(key, r * stride + p))(
+        token_rid, token_pos.astype(jnp.int32))
+
+
+def sample_tokens(logits: jax.Array, keys: Optional[jax.Array],
+                  temp: float = 0.0, topk: Optional[int] = None) -> jax.Array:
+    """Sample the packed stream's next tokens: greedy when ``temp <= 0``
+    (the default and the spec-decode exactness baseline), else
+    temperature / top-k categorical with one ``packed_keys`` key per row.
+
+    logits: (T, V) or (T, K, V) -> (T,) / (T, K) int32.  The Gumbel trick
+    over per-row keys keeps every row (and every codebook) independent
+    while staying a single fused program."""
+    if temp <= 0:
+        return greedy(logits)
+    assert keys is not None, "stochastic sampling needs packed_keys"
+    lg = logits.astype(jnp.float32) / max(temp, 1e-6)
+    if topk is not None:
+        vals, idx = jax.lax.top_k(lg, topk)
+        noise = jax.vmap(lambda k: jax.random.gumbel(k, vals.shape[1:]))(keys)
+        choice = jnp.argmax(vals + noise, axis=-1)
+        return jnp.take_along_axis(idx, choice[..., None],
+                                   axis=-1)[..., 0].astype(jnp.int32)
+    noise = jax.vmap(lambda k: jax.random.gumbel(k, lg.shape[1:]))(keys)
+    return jnp.argmax(lg + noise, axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# device-resident sampled-token feedback (async pipeline, DESIGN.md §10;
+# generalized to the per-slot token ring of DESIGN.md §13)
 # ---------------------------------------------------------------------------
 def substitute_last(tokens: jax.Array, last_token: jax.Array,
-                    token_slot: jax.Array, from_last: jax.Array) -> jax.Array:
+                    token_slot: jax.Array, from_last: jax.Array,
+                    accept_len: Optional[jax.Array] = None) -> jax.Array:
     """Replace the packed stream's decode placeholders with the on-device
     ``last_token`` buffer, so the host never needs the previous iteration's
     sampled values to build an input stream.
 
     tokens: (1, T[, K]) host-built stream (decode positions hold
-    placeholders); last_token: (n_slots,) per-slot feedback buffer;
-    token_slot: (T,); from_last: (T,) bool — True at decode positions.
-    Multi-codebook streams broadcast the feedback token across codebooks,
-    matching the host path's ``repeat`` of the codebook-0 sample."""
-    fed = last_token[token_slot]                         # (T,)
+    placeholders); last_token: (n_slots,) per-slot feedback buffer, or its
+    speculative-decoding generalization (n_slots, W) — the per-slot token
+    ring whose row holds the last verify segment's W samples, of which the
+    first ``accept_len[slot]`` were accepted (DESIGN.md §13).  The fed
+    token is the newest *accepted* sample, ``ring[slot, accept_len-1]``;
+    with a (n_slots,) buffer (or ``accept_len=None``) this is exactly the
+    §10 behaviour.  token_slot: (T,); from_last: (T,) bool — True at
+    decode positions.  Multi-codebook streams broadcast the feedback token
+    across codebooks, matching the host path's ``repeat`` of the
+    codebook-0 sample."""
+    if last_token.ndim == 1:
+        fed = last_token[token_slot]                     # (T,)
+    else:
+        if accept_len is None:
+            col = jnp.zeros(token_slot.shape, jnp.int32)
+        else:
+            col = jnp.clip(accept_len[token_slot] - 1, 0,
+                           last_token.shape[1] - 1)
+        fed = last_token[token_slot, col]                # (T,)
     fed = fed.reshape(fed.shape + (1,) * (tokens.ndim - 2))
     mask = from_last.reshape(from_last.shape + (1,) * (tokens.ndim - 2))
     return jnp.where(mask, fed.astype(tokens.dtype), tokens[0])[None]
@@ -50,9 +111,15 @@ def scatter_last(last_token: jax.Array, sample_slot: jax.Array,
     """Scatter this iteration's samples into the feedback buffer at the
     stream's sample points (each decode token and each prefill-final
     token).  ``sample_slot`` is the token's slot at sample points and
-    ``n_slots`` (out of bounds → dropped) elsewhere.  Multi-codebook
-    samples keep codebook 0, matching the host feedback path."""
+    ``n_slots`` (out of bounds → dropped) elsewhere.  A ring-shaped
+    buffer (n_slots, W) takes single-sample points in column 0 (a
+    one-sample "segment"; verify segments write whole rows in the engine's
+    acceptance path instead).  Multi-codebook samples keep codebook 0,
+    matching the host feedback path."""
     if sampled.ndim == 2:
         sampled = sampled[:, 0]
+    if last_token.ndim == 2:
+        return last_token.at[sample_slot, 0].set(
+            sampled.astype(last_token.dtype), mode="drop")
     return last_token.at[sample_slot].set(
         sampled.astype(last_token.dtype), mode="drop")

@@ -20,6 +20,15 @@ overhead), finishes requests, and *drops* speculative tokens that raced
 past a finish (``dropped_tokens``).  With an eager engine
 (``async_depth=0``) launch state never leads committed state and the
 schedule is bit-identical to the pre-§10 lock-step one.
+
+With speculative decoding (``spec_k > 0``, DESIGN.md §13) each decoding
+request contributes a ``spec_k + 1``-token *verify segment* instead of a
+single decode token: the device-fed last accepted token plus ``spec_k``
+drafter proposals.  All launch-side accounting (``inflight``, KV extents,
+token budgets) uses the worst case — every verify launch is charged the
+full ``spec_k + 1`` samples — and ``commit`` reconciles with the actual
+accepted prefix, so admission/planning stay conservative while the device
+rolls ``cache_len`` back for rejected positions on its own.
 """
 from __future__ import annotations
 
@@ -45,21 +54,28 @@ class BatchPlan:
     decode: list[Request]
     prefill: list[PrefillChunk]
     dense_batch: int     # the discrete dense size this plan fills
+    # tokens per decode entry: 1, or spec_k + 1 when each decoding slot
+    # launches a verify segment (DESIGN.md §13)
+    decode_width: int = 1
 
     @property
     def dense_tokens(self) -> int:
-        return len(self.decode) + sum(c.length for c in self.prefill)
+        return (len(self.decode) * self.decode_width
+                + sum(c.length for c in self.prefill))
 
 
 @dataclasses.dataclass
 class PackedSegment:
     """One contiguous token run of the packed stream (DESIGN.md §8):
-    a single decode token, or one prefill chunk."""
+    a single decode token, one prefill chunk, or — with speculative
+    decoding (§13) — one ``spec_k + 1``-token verify segment whose first
+    token is device-fed and whose tail holds the drafter's proposals."""
     req: Request
     offset: int          # position of the segment's first token (prefill);
     #                      decode positions come from the engine's slot state
     length: int
     is_decode: bool
+    draft: tuple[int, ...] = ()   # spec_k proposals (verify segments only)
 
 
 @dataclasses.dataclass
@@ -103,10 +119,16 @@ class GlobalBatchScheduler:
                  max_active: int = 256,
                  prefill_chunk_min: int = 8,
                  kv_buckets: Optional[tuple[int, ...]] = None,
-                 max_request_len: Optional[int] = None):
+                 max_request_len: Optional[int] = None,
+                 spec_k: int = 0, drafter=None):
         self.kv = kv
         self.sizes = tuple(sorted(discrete_sizes, reverse=True))
         self.max_active = max_active
+        # speculative decoding (DESIGN.md §13): every decode entry plans,
+        # launches, and is charged ``spec_k + 1`` tokens (worst case); the
+        # drafter fills the segment's proposal tail at pack() time
+        self.spec_k = int(spec_k)
+        self.drafter = drafter
         # per-slot position extent (the engine's max_len): a prompt longer
         # than a slot can hold is never admitted — it stays in the waiting
         # queue (long-standing documented behavior), instead of prefilling
@@ -206,13 +228,14 @@ class GlobalBatchScheduler:
         decode = [r for r in self.active if self._decodable(r)]
         prefilling = [r for r in self.active if r.prefill_unlaunched > 0]
 
-        available = len(decode) + sum(r.prefill_unlaunched
-                                      for r in prefilling)
+        width = self.spec_k + 1
+        available = len(decode) * width + sum(r.prefill_unlaunched
+                                              for r in prefilling)
         if available == 0:
             return None
         dense = self._pick_dense(available)
 
-        budget = max(dense - len(decode), 0)
+        budget = max(dense - len(decode) * width, 0)
         chunks: list[PrefillChunk] = []
         for r in prefilling:
             if budget < min(self.chunk_min, r.prefill_unlaunched):
@@ -221,15 +244,18 @@ class GlobalBatchScheduler:
             chunks.append(PrefillChunk(req=r, offset=r.prefill_launched,
                                        length=take))
             budget -= take
-        return BatchPlan(decode=decode, prefill=chunks, dense_batch=dense)
+        return BatchPlan(decode=decode, prefill=chunks, dense_batch=dense,
+                         decode_width=width)
 
     def mark_launched(self, plan: BatchPlan) -> None:
         """Advance launch-side state when the engine dispatches ``plan``
         (after ``pack()`` — packing reads the pre-launch in-flight counts).
-        Each decode token and each prefill-*final* chunk puts one sampled
-        token in flight; ``commit`` retires them as results arrive."""
+        Each decode entry puts ``decode_width`` sampled tokens in flight
+        (the worst case of a verify segment, §13 — ``commit`` reconciles
+        with the accepted count) and each prefill-*final* chunk puts one;
+        ``commit`` retires them as results arrive."""
         for r in plan.decode:
-            r.inflight += 1
+            r.inflight += plan.decode_width
         for c in plan.prefill:
             c.req.prefill_launched += c.length
             if c.req.prefill_launched >= c.req.prompt_len:
@@ -244,10 +270,15 @@ class GlobalBatchScheduler:
         discrete size, it joins the grid as a floor bucket: a decode-only
         iteration can never exceed ``max_active`` tokens, and padding it up
         to a size no real batch reaches would be pure waste (one extra
-        compiled program, used by every decode-only iteration)."""
+        compiled program, used by every decode-only iteration).  With
+        speculative decoding a decode-only iteration reaches
+        ``max_active × (spec_k + 1)`` tokens, so that floor joins the grid
+        instead — still exactly one extra bucket (the "static spec_k grid"
+        of DESIGN.md §13's compile-cache accounting)."""
         grid = tuple(reversed(self.sizes))   # ascending
-        if self.max_active < grid[0]:
-            grid = (self.max_active,) + grid
+        floor = self.max_active * (self.spec_k + 1)
+        if floor < grid[0]:
+            grid = (floor,) + grid
         for s in grid:
             if tokens <= s:
                 return s
@@ -265,17 +296,38 @@ class GlobalBatchScheduler:
 
     def _kv_needed(self, segs: list[PackedSegment]) -> int:
         """Exact max KV extent this iteration's attention touches: a decode
-        segment writes at position ``total_tokens + inflight - 1`` (prompt
-        + committed outputs + launched-but-uncommitted samples, which all
-        occupy cache rows below it) and attends one more row than that; a
-        prefill chunk attends ``offset + length`` rows.  With an eager
-        engine ``inflight`` is zero at pack time and this reduces to the
-        pre-§10 ``total_tokens``."""
+        segment's first token writes at position ``total_tokens + inflight
+        - 1`` (prompt + committed outputs + launched-but-uncommitted
+        samples, which all occupy cache rows below it) and its last draft
+        position sits ``spec_k`` rows further (§13 verify segments; the
+        worst case — the device may roll back to less); each position
+        attends one more row than its index.  A prefill chunk attends
+        ``offset + length`` rows.  With an eager non-speculative engine
+        ``inflight`` and ``spec_k`` are zero at pack time and this reduces
+        to the pre-§10 ``total_tokens``."""
         needed = 1
         for s in segs:
-            needed = max(needed, s.req.total_tokens + s.req.inflight
+            needed = max(needed,
+                         s.req.total_tokens + s.req.inflight + self.spec_k
                          if s.is_decode else s.offset + s.length)
         return needed
+
+    def _draft(self, r: Request) -> tuple[int, ...]:
+        """Exactly ``spec_k`` draft tokens for a verify segment (§13).  The
+        drafter sees the *committed* history only (under the async pipeline
+        that lags the device by up to ``async_depth`` verifies — stale
+        drafts lower acceptance, never correctness); short or empty
+        proposals are padded with the last history token so every verify
+        segment has the uniform static width the accounting assumes."""
+        if self.spec_k == 0:
+            return ()
+        prop = list(self.drafter.propose(r, self.spec_k))[:self.spec_k] \
+            if self.drafter is not None else []
+        if len(prop) < self.spec_k:
+            hist = r.prompt + r.output
+            pad = prop[-1] if prop else (hist[-1] if hist else 0)
+            prop += [pad] * (self.spec_k - len(prop))
+        return tuple(int(t) for t in prop)
 
     def pack(self, plan: BatchPlan, *, nano: int = 2) -> PackedPlan:
         """Lay one iteration's decode tokens + prefill chunks out as a
@@ -284,12 +336,15 @@ class GlobalBatchScheduler:
         compute-bound chunks in descending length), launch length bucketed
         to the discrete dense sizes, the max KV extent quantized to the
         kv-bucket grid, padding accounted."""
-        segs = [PackedSegment(req=r, offset=-1, length=1, is_decode=True)
+        width = plan.decode_width
+        segs = [PackedSegment(req=r, offset=-1, length=width, is_decode=True,
+                              draft=self._draft(r))
                 for r in plan.decode]
         segs += [PackedSegment(req=c.req, offset=c.offset, length=c.length,
                                is_decode=False) for c in plan.prefill]
         order = packed_segment_order(
-            ["decode" if s.is_decode else "prefill" for s in segs],
+            [("verify" if s.length > 1 else "decode") if s.is_decode
+             else "prefill" for s in segs],
             [s.length for s in segs])
         segs = [segs[i] for i in order]
         tokens = plan.dense_tokens
@@ -307,19 +362,25 @@ class GlobalBatchScheduler:
                           kv_needed=kv_needed)
 
     # ---- post-iteration bookkeeping -------------------------------------------
-    def commit(self, plan: BatchPlan, sampled: dict[int, int],
-               now: float) -> list[Request]:
-        """Apply iteration results.  ``sampled``: rid -> next token id.
+    def commit(self, plan: BatchPlan, sampled, now: float) -> list[Request]:
+        """Apply iteration results.  ``sampled``: rid -> next token id, or
+        — for a §13 verify segment — the *accepted* token list (1 to
+        ``decode_width`` tokens: the target-model sample at the segment
+        base plus every accepted draft continuation).
 
         EOS is *not* acted on this iteration (async top-level scheduling,
         §5.3): the request is flagged and removed at the next planning
-        opportunity, generating one extra token — paper's <1% overhead.
-        Under a pipelined engine (§10) commits arrive up to ``async_depth``
-        iterations after their plan was formed; tokens sampled for a
-        request that has since FINISHED (its later iterations were launched
-        before the EOS-bearing commit landed) are *dropped* here — the
-        request was already finalized and returned, so a late append would
-        mutate a result the caller holds."""
+        opportunity, generating one extra token (one extra *verify
+        segment* under speculation — everything after the post-EOS token
+        is dropped here) — paper's <1% overhead.  Under a pipelined engine
+        (§10) commits arrive up to ``async_depth`` iterations after their
+        plan was formed; tokens sampled for a request that has since
+        FINISHED (its later iterations were launched before the
+        EOS-bearing commit landed) are *dropped* here — the request was
+        already finalized and returned, so a late append would mutate a
+        result the caller holds.  ``max_new_tokens`` truncation works the
+        same way: accepted tokens past the cap are dropped, so speculation
+        never overshoots the request's contract."""
         finished = []
         prefix = getattr(self.kv, "prefix_caching", False)
         for c in plan.prefill:
@@ -338,37 +399,49 @@ class GlobalBatchScheduler:
                                       if prefix else None))
             if c.req.prefill_remaining == 0:
                 c.req.state = State.DECODE
+        decode_rids = {r.rid for r in plan.decode}
         for r in list(plan.decode) + [c.req for c in plan.prefill
                                       if c.req.state == State.DECODE]:
             tok = sampled.get(r.rid)
             if tok is None:
                 continue
-            r.inflight = max(r.inflight - 1, 0)
+            toks = list(tok) if isinstance(tok, (list, tuple)) else [tok]
+            # retire the *launched* worst case (decode_width per verify
+            # segment, 1 per prefill-final), not the accepted count —
+            # launch-side accounting charged the worst case too
+            launched = plan.decode_width if r.rid in decode_rids else 1
+            r.inflight = max(r.inflight - launched, 0)
             if r.state in (State.FINISHED, State.DISCARDED):
-                self.dropped_tokens += 1   # late speculative token (§10)
+                self.dropped_tokens += len(toks)  # late speculative (§10)
                 continue
             if r.first_token_at is None:
                 r.first_token_at = now
-            r.output.append(tok)
-            # extend may fail only if the §4.4 peak estimate under-predicted
-            # (requests decoding far past avg_decode_len) — the launch-aware
-            # sweep (kvcache.peak_pages) removes the pipeline-lag cause, the
-            # rest is inherent to the heuristic; failures are counted
-            # (KVStats.extend_failures), the paper's answer is rare reclaim
-            # (State.DISCARDED), not a hard error on the serving loop.
-            # Committed-and-written rows at this point are the prompt plus
-            # every output but the newest (its KV lands next launch): only
-            # blocks fully below that promote into the hash table (§12)
-            self.kv.extend(r.rid, r.total_tokens + 1,
-                           token_ids=(r.prompt + r.output[:-1]
-                                      if prefix else None))
-            hit_eos = (r.eos_id is not None and tok == r.eos_id)
-            if r.pending_eos or len(r.output) >= r.max_new_tokens:
-                r.state = State.FINISHED
-                r.finished_at = now
-                finished.append(r)
-            elif hit_eos:
-                r.pending_eos = True       # detected next iteration
+            for t in toks:
+                if r.state == State.FINISHED:
+                    self.dropped_tokens += 1   # accepted past finish (§13)
+                    continue
+                r.output.append(t)
+                # extend may fail only if the §4.4 peak estimate
+                # under-predicted (requests decoding far past
+                # avg_decode_len) — the launch-aware sweep
+                # (kvcache.peak_pages) removes the pipeline-lag cause, the
+                # rest is inherent to the heuristic; failures are counted
+                # (KVStats.extend_failures), the paper's answer is rare
+                # reclaim (State.DISCARDED), not a hard error on the
+                # serving loop.  Committed-and-written rows at this point
+                # are the prompt plus every output but the newest (its KV
+                # lands next launch): only blocks fully below that promote
+                # into the hash table (§12)
+                self.kv.extend(r.rid, r.total_tokens + 1,
+                               token_ids=(r.prompt + r.output[:-1]
+                                          if prefix else None))
+                hit_eos = (r.eos_id is not None and t == r.eos_id)
+                if r.pending_eos or len(r.output) >= r.max_new_tokens:
+                    r.state = State.FINISHED
+                    r.finished_at = now
+                    finished.append(r)
+                elif hit_eos:
+                    r.pending_eos = True   # detected next iteration
         self.active = [r for r in self.active if r.state != State.FINISHED]
         return finished
 

@@ -1,0 +1,149 @@
+"""Direct unit tests for the packed-step sampling helpers
+(serving/sampling.py): the §10 device-resident feedback pair
+``substitute_last`` / ``scatter_last`` (including the §13 token-ring
+generalization) and the temperature/top-k samplers behind
+``EngineConfig.temperature`` / ``top_k``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving import sampling
+
+
+def _arr(x, dt=jnp.int32):
+    return jnp.asarray(np.asarray(x), dt)
+
+
+# ---------------------------------------------------------------------------
+# substitute_last
+# ---------------------------------------------------------------------------
+def test_substitute_last_1d_buffer():
+    tokens = _arr([[10, 0, 30, 0]])
+    last = _arr([7, 8])
+    slot = _arr([0, 1, 0, 0])
+    mask = _arr([False, True, False, True], jnp.bool_)
+    out = sampling.substitute_last(tokens, last, slot, mask)
+    assert out.shape == tokens.shape
+    np.testing.assert_array_equal(np.asarray(out[0]), [10, 8, 30, 7])
+
+
+def test_substitute_last_all_from_last():
+    """A decode-only iteration: every position is a placeholder."""
+    tokens = jnp.zeros((1, 3), jnp.int32)
+    last = _arr([4, 5, 6])
+    slot = _arr([2, 0, 1])
+    mask = jnp.ones((3,), bool)
+    out = sampling.substitute_last(tokens, last, slot, mask)
+    np.testing.assert_array_equal(np.asarray(out[0]), [6, 4, 5])
+
+
+def test_substitute_last_ring_selects_newest_accepted():
+    """(n_slots, W) ring: the fed token is ring[slot, accept_len-1]."""
+    tokens = jnp.zeros((1, 2), jnp.int32)
+    ring = _arr([[11, 12, 13], [21, 22, 23]])
+    slot = _arr([0, 1])
+    mask = jnp.ones((2,), bool)
+    acc = _arr([2, 3])
+    out = sampling.substitute_last(tokens, ring, slot, mask, accept_len=acc)
+    np.testing.assert_array_equal(np.asarray(out[0]), [12, 23])
+    # accept_len is clipped into the ring (0 -> column 0, >W -> last)
+    acc2 = _arr([0, 9])
+    out2 = sampling.substitute_last(tokens, ring, slot, mask,
+                                    accept_len=acc2)
+    np.testing.assert_array_equal(np.asarray(out2[0]), [11, 23])
+    # no accept_len -> column 0 (the §10 single-token behaviour)
+    out3 = sampling.substitute_last(tokens, ring, slot, mask)
+    np.testing.assert_array_equal(np.asarray(out3[0]), [11, 21])
+
+
+def test_substitute_last_multicodebook_broadcast():
+    tokens = jnp.zeros((1, 2, 3), jnp.int32)     # (1, T, K)
+    last = _arr([9, 4])
+    slot = _arr([1, 0])
+    mask = _arr([True, False], jnp.bool_)
+    out = sampling.substitute_last(tokens, last, slot, mask)
+    np.testing.assert_array_equal(np.asarray(out[0, 0]), [4, 4, 4])
+    np.testing.assert_array_equal(np.asarray(out[0, 1]), [0, 0, 0])
+
+
+# ---------------------------------------------------------------------------
+# scatter_last
+# ---------------------------------------------------------------------------
+def test_scatter_last_1d():
+    last = _arr([1, 2, 3])
+    sample_slot = _arr([3, 1, 3])          # n_slots == 3 -> OOB -> dropped
+    sampled = _arr([10, 20, 30])
+    out = sampling.scatter_last(last, sample_slot, sampled)
+    np.testing.assert_array_equal(np.asarray(out), [1, 20, 3])
+
+
+def test_scatter_last_empty_sample_slot_is_noop():
+    """All-OOB sample points (e.g. a mid-prompt prefill-only iteration):
+    the buffer must come back unchanged, 1-D and ring alike."""
+    sample_slot = _arr([2, 2])
+    sampled = _arr([10, 20])
+    last1 = _arr([5, 6])
+    np.testing.assert_array_equal(
+        np.asarray(sampling.scatter_last(last1, sample_slot, sampled)),
+        [5, 6])
+    ring = _arr([[1, 2], [3, 4]])
+    np.testing.assert_array_equal(
+        np.asarray(sampling.scatter_last(ring, sample_slot, sampled)),
+        [[1, 2], [3, 4]])
+
+
+def test_scatter_last_ring_writes_column_zero_only():
+    ring = _arr([[1, 2, 3], [4, 5, 6]])
+    out = sampling.scatter_last(ring, _arr([1, 2]), _arr([40, 99]))
+    np.testing.assert_array_equal(np.asarray(out), [[1, 2, 3], [40, 5, 6]])
+
+
+def test_scatter_last_multicodebook_keeps_codebook0():
+    ring = jnp.zeros((2, 2), jnp.int32)
+    sampled = _arr([[7, 8], [9, 10]])       # (T, K)
+    out = sampling.scatter_last(ring, _arr([0, 1]), sampled)
+    np.testing.assert_array_equal(np.asarray(out), [[7, 0], [9, 0]])
+
+
+# ---------------------------------------------------------------------------
+# packed_keys / sample_tokens
+# ---------------------------------------------------------------------------
+def test_packed_keys_unique_per_slot_pos():
+    key = jax.random.PRNGKey(0)
+    slot = _arr([0, 0, 1, 1])
+    pos = _arr([0, 1, 0, 1])
+    keys = np.asarray(sampling.packed_keys(key, slot, pos, stride=100))
+    assert len({tuple(k) for k in keys}) == 4
+
+
+def test_sample_tokens_greedy_at_zero_temperature():
+    logits = jnp.asarray(np.random.default_rng(0).normal(size=(5, 17)),
+                         jnp.float32)
+    out = sampling.sample_tokens(logits, None, temp=0.0)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(sampling.greedy(logits)))
+
+
+def test_sample_tokens_topk1_is_greedy():
+    logits = jnp.asarray(np.random.default_rng(1).normal(size=(6, 9)),
+                         jnp.float32)
+    keys = sampling.packed_keys(jax.random.PRNGKey(3), _arr(range(6)),
+                                _arr([0] * 6), stride=8)
+    out = sampling.sample_tokens(logits, keys, temp=1.0, topk=1)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(sampling.greedy(logits)))
+
+
+def test_sample_tokens_deterministic_and_in_range():
+    logits = jnp.asarray(np.random.default_rng(2).normal(size=(8, 13)),
+                         jnp.float32)
+    keys = sampling.packed_keys(jax.random.PRNGKey(5), _arr(range(8)),
+                                _arr([3] * 8), stride=10)
+    a = np.asarray(sampling.sample_tokens(logits, keys, temp=0.7, topk=4))
+    b = np.asarray(sampling.sample_tokens(logits, keys, temp=0.7, topk=4))
+    np.testing.assert_array_equal(a, b)
+    assert a.dtype == np.int32 and (a >= 0).all() and (a < 13).all()
+    # top-k actually constrains support: every pick is within the top 4
+    top4 = np.argsort(-np.asarray(logits), axis=-1)[:, :4]
+    assert all(a[i] in top4[i] for i in range(8))

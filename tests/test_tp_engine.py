@@ -167,3 +167,38 @@ def test_tp_requires_packed_step_and_divisible_widths():
     bad = dataclasses.replace(cfg, n_heads=3, n_kv_heads=3, head_dim=64)
     with pytest.raises(ValueError, match="n_heads"):
         ServeEngine(bad, params, tp=2)
+
+
+def _run_spec(cfg, params, tp, spec_k, depth=1):
+    eng = ServeEngine(cfg, params, EngineConfig(
+        max_slots=2, max_len=64, discrete_sizes=SIZES, avg_decode_len=4.0,
+        tp=tp, spec_k=spec_k, async_depth=depth, async_harvest=False))
+    motif = [5, 9, 3, 7]
+    for i, p in enumerate([motif * 5, ([2, 4] * 6)[:11], motif * 3]):
+        eng.submit(Request(rid=i, prompt=list(p), max_new_tokens=8))
+    done = eng.run()
+    assert len(done) == 3 and eng.in_flight == 0
+    return eng, {r.rid: tuple(r.output) for r in done}
+
+
+@needs_devices
+@pytest.mark.parametrize("depth", [0, 1])
+def test_tp2_spec_decode_token_exact(depth):
+    """Speculative decoding (DESIGN.md §13) composes with TP: the verify
+    segment's acceptance/rollback runs on replicated metadata inside the
+    shard_map body, so tp=2 spec serving is f32 token-exact against both
+    tp=1 spec and the plain (spec_k=0) engine, with the 1-dispatch /
+    1-deferred-sync invariant and the compile-cache bound intact."""
+    cfg = _cfg("tiny-toy")
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    _, base = _run_spec(cfg, params, 1, 0, depth)
+    e1, out1 = _run_spec(cfg, params, 1, 3, depth)
+    e2, out2 = _run_spec(cfg, params, 2, 3, depth)
+    assert out1 == base
+    assert out2 == base
+    assert e2.stats.dispatches_per_iter == 1.0
+    assert e2.stats.syncs_per_iter == 1.0
+    assert e2.stats.spec_verify_segments > 0
+    assert e2.stats.spec_accepted_tokens == e1.stats.spec_accepted_tokens
+    bound = (len(SIZES) + 1) * len(e2.kv_buckets)
+    assert e2._packed_step._cache_size() <= bound
