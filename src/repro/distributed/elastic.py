@@ -64,6 +64,20 @@ class ElasticManager:
         self.state = new
         return ElasticDecision("rescale", new, f"data axis {s.data}->{new_data}")
 
+    def on_leave(self, count: int = 1) -> ElasticDecision:
+        """Voluntary scale-down (drained replica retiring): same data-axis
+        arithmetic and ``min_data`` floor as a failure, but the host is not
+        *failed* — ``failed_hosts`` stays put so failure-rate dashboards
+        aren't polluted by planned rescales."""
+        s = self.state
+        new_data = s.data - count
+        if new_data < self.min_data:
+            return ElasticDecision("halt", s, "below minimum data parallelism")
+        new = ClusterState(new_data, s.model, s.pods, s.failed_hosts)
+        self.state = new
+        return ElasticDecision("rescale", new,
+                               f"graceful leave {s.data}->{new_data}")
+
     def on_capacity(self, added_rows: int) -> ElasticDecision:
         s = self.state
         new = ClusterState(s.data + added_rows, s.model, s.pods)

@@ -14,8 +14,9 @@ import numpy as np
 
 from repro.configs import get_config, scale_down
 from repro.models import model as model_lib
-from repro.serving.config import EngineConfig
+from repro.serving.config import EngineConfig, PoolConfig
 from repro.serving.engine import ServeEngine
+from repro.serving.pool import ReplicaPool
 from repro.serving.request import Request
 
 
@@ -46,6 +47,56 @@ def make_requests(n: int, vocab: int, seed: int = 0, p_mean: int = 24,
     return out
 
 
+def serve_pool(args, cfg, params, pcfg, reqs) -> None:
+    """Multi-replica path (DESIGN.md §14): N engines behind the router,
+    driven by the pool event loop, with optional chaos injection."""
+    ecfg = EngineConfig.from_args(args, seed=args.seed)
+
+    def mk_engine():
+        return ServeEngine(cfg, params, ecfg)
+
+    pool = ReplicaPool([mk_engine() for _ in range(pcfg.replicas)], pcfg,
+                       engine_factory=mk_engine)
+    rng = np.random.default_rng(args.seed)
+    if args.online:
+        offsets = list(np.cumsum(
+            rng.exponential(1.0 / args.rate, size=len(reqs))))
+    else:
+        offsets = [0.0] * len(reqs)
+    t0 = time.perf_counter()
+    results = pool.run_online(reqs, offsets, duration=args.duration
+                              if args.online else None)
+    wall = time.perf_counter() - t0
+
+    snap = pool.snapshot()
+    n_tok = sum(h.engine.stats.total_tokens
+                for h in pool.router.replicas if h.engine is not None)
+    print(f"pool[{pcfg.replicas} replicas]: finished {len(results)}"
+          f"/{len(reqs)} requests, {snap['shed_requests']} shed, "
+          f"{n_tok} tokens in {wall*1e3:.0f} ms "
+          f"({n_tok / max(wall, 1e-9):.1f} tok/s)")
+    print(f"fault tolerance: {snap['faults_injected']} faults injected, "
+          f"{snap['redispatched_requests']} requests re-dispatched "
+          f"({snap['redispatched_tokens']} committed tokens replayed), "
+          f"{snap['retries']} retries, {snap['timeouts']} timeouts, "
+          f"{snap['slo_violations']} SLO violations")
+    for rep in snap["replicas"]:
+        state = "alive" if rep["alive"] else "dead"
+        if rep["suspect"]:
+            state += "/suspect"
+        print(f"  r{rep['replica']} [{state}]: depth {rep['queue_depth']}, "
+              f"queued {rep['queued_tokens']} tok, in-flight "
+              f"{rep['inflight_tokens']} tok, KV {rep['kv_used_frac']:.0%}")
+    done = list(results.values())
+    lat = [r.finished_at - r.arrival for r in done
+           if r.finished_at is not None]
+    if lat and args.online:
+        print(f"latency: p50 {np.percentile(lat, 50)*1e3:.1f} ms "
+              f"p99 {np.percentile(lat, 99)*1e3:.1f} ms")
+    for r in pool.shed[:5]:
+        print(f"  shed rid={r.rid}: {r.reject_reason}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tiny-toy")
@@ -54,6 +105,9 @@ def main() -> None:
     # engine knobs are defined ONCE on EngineConfig and shared with
     # benchmarks/offline_throughput.py
     EngineConfig.add_args(ap)
+    # pool knobs (DESIGN.md §14) — defined once, shared with the online
+    # latency benchmark
+    PoolConfig.add_args(ap)
     ap.add_argument("--online", action="store_true")
     ap.add_argument("--rate", type=float, default=4.0, help="req/s (poisson)")
     ap.add_argument("--duration", type=float, default=10.0)
@@ -65,8 +119,13 @@ def main() -> None:
     if args.smoke:
         cfg = scale_down(cfg)
     params = model_lib.init(cfg, jax.random.PRNGKey(args.seed))
-    eng = ServeEngine(cfg, params, EngineConfig.from_args(args, seed=args.seed))
+    pcfg = PoolConfig.from_args(args)
     reqs = make_requests(args.requests, cfg.vocab_size, args.seed)
+
+    if pcfg.replicas > 1 or pcfg.fault_plan:
+        serve_pool(args, cfg, params, pcfg, reqs)
+        return
+    eng = ServeEngine(cfg, params, EngineConfig.from_args(args, seed=args.seed))
 
     if not args.online:
         for r in reqs:

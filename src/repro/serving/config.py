@@ -248,3 +248,85 @@ class EngineConfig:
         )
         kw.update(overrides)
         return cls(**kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolConfig:
+    """Multi-replica pool + SLO admission knobs (DESIGN.md §14).
+
+    Same rules as ``EngineConfig``: fields store what the caller said,
+    validation in ``__post_init__``, flags defined once in ``add_args``
+    and rebuilt by ``from_args``.  All SLO fields are optional — ``None``
+    disables that admission/violation check, so a bare single-replica pool
+    behaves exactly like the engine it wraps."""
+
+    replicas: int = 1
+    # TTFT admission SLO: predicted time-to-first-token (cheapest replica's
+    # backlog / measured service rate) above this -> shed with reason
+    slo_ttft_ms: Optional[float] = None
+    # TPOT SLO: per-output-token latency; checked at completion (a
+    # violation is recorded, not retroactively shed)
+    slo_tpot_ms: Optional[float] = None
+    # hard backlog cap per replica in tokens: the deterministic shed
+    # trigger (virtual-clock tests can't rely on wall-time predictions)
+    shed_backlog_tokens: Optional[int] = None
+    # admission headroom: predicted TTFT is compared against
+    # slo_ttft_ms * slo_safety (under-admit rather than violate)
+    slo_safety: float = 1.0
+    # queue-timeout for a request stuck WAITING on one replica; after
+    # ``retry_limit`` re-routes it is shed with reason "retry_limit"
+    request_timeout_s: Optional[float] = None
+    retry_limit: int = 3
+    backoff_base_s: float = 0.01
+    # chaos: FaultPlan spec string ("kill@40:r1,...") or None
+    fault_plan: Optional[str] = None
+    # session affinity (multi-turn requests pinned to their prefix cache)
+    affinity: bool = True
+
+    def __post_init__(self):
+        if self.replicas < 1:
+            raise ValueError("replicas must be >= 1")
+        if self.retry_limit < 0:
+            raise ValueError("retry_limit must be >= 0")
+        for f in ("slo_ttft_ms", "slo_tpot_ms", "request_timeout_s"):
+            v = getattr(self, f)
+            if v is not None and v <= 0:
+                raise ValueError(f"{f} must be positive when set")
+
+    @classmethod
+    def add_args(cls, ap: argparse.ArgumentParser) -> None:
+        """Pool CLI surface shared by launch/serve.py and the online
+        latency benchmark."""
+        ap.add_argument("--replicas", type=int, default=cls.replicas,
+                        help="engine replicas behind the router")
+        ap.add_argument("--slo-ttft-ms", type=float, default=None,
+                        help="TTFT SLO; admission sheds requests whose "
+                             "predicted TTFT exceeds it")
+        ap.add_argument("--slo-tpot-ms", type=float, default=None,
+                        help="per-output-token SLO; violations counted "
+                             "at completion")
+        ap.add_argument("--shed-backlog-tokens", type=int, default=None,
+                        help="hard per-replica backlog cap (tokens) "
+                             "before shedding")
+        ap.add_argument("--request-timeout-s", type=float, default=None,
+                        help="queue timeout before retry-with-backoff")
+        ap.add_argument("--retry-limit", type=int, default=cls.retry_limit,
+                        help="re-dispatch attempts before a request is "
+                             "shed")
+        ap.add_argument("--fault-plan", default=None,
+                        help="chaos spec, e.g. 'kill@40:r1,stall@10:r0:20'"
+                             " (tick-indexed, deterministic)")
+
+    @classmethod
+    def from_args(cls, ns: argparse.Namespace, **overrides) -> "PoolConfig":
+        kw = dict(
+            replicas=ns.replicas,
+            slo_ttft_ms=ns.slo_ttft_ms,
+            slo_tpot_ms=ns.slo_tpot_ms,
+            shed_backlog_tokens=ns.shed_backlog_tokens,
+            request_timeout_s=ns.request_timeout_s,
+            retry_limit=ns.retry_limit,
+            fault_plan=ns.fault_plan,
+        )
+        kw.update(overrides)
+        return cls(**kw)

@@ -163,6 +163,12 @@ class EngineStats:
     spec_proposed_tokens: int = 0
     spec_accepted_tokens: int = 0
     spec_verify_segments: int = 0
+    # fault-tolerant re-dispatch (DESIGN.md §14): requests checkpointed and
+    # handed back by ``evacuate`` (replica failure or graceful leave), and
+    # the committed tokens they fold into their replay prefix — the
+    # re-prefill work another replica will absorb
+    evacuated_requests: int = 0
+    evacuated_tokens: int = 0
 
     @property
     def total_tokens(self) -> int:
@@ -303,6 +309,10 @@ class ServeEngine:
         self.async_depth = config.resolved_async_depth
         self.async_harvest = bool(config.async_harvest)
         self._ring: deque[_InFlight] = deque()
+        # commit/arrival timestamp source: the replica pool (DESIGN.md §14)
+        # injects a virtual clock for deterministic SLO tests; duration
+        # accounting (host/dispatch/blocked splits) always uses perf_counter
+        self._clock = time.perf_counter
         self.nano = config.nano
         self.key = jax.random.PRNGKey(config.seed)
         # §Perf HC3 toggles (single source of truth: EngineConfig): resolved
@@ -789,6 +799,55 @@ class ServeEngine:
             retired += 1
         return done
 
+    def evacuate(self, *, drain: bool = True) \
+            -> tuple[list[Request], list[Request]]:
+        """Checkpoint every unfinished request for re-dispatch on another
+        replica (DESIGN.md §14) and release all engine-local state for them
+        (slot, cache_len, KV blocks).  Returns ``(finished, moved)``.
+
+        ``drain=True`` is the graceful drain-and-evacuate (replica leave):
+        in-flight iterations retire first, so their sampled tokens commit
+        and the replay prefix is as long as possible.  ``drain=False`` is
+        the failure path: a dead replica's in-flight results are *lost* —
+        the ring is abandoned unfetched and only committed tokens survive
+        into the checkpoint (which is exactly what keeps the resumed
+        generation token-exact: nothing uncommitted is ever replayed).
+
+        Requests whose committed output already holds EOS (or whose budget
+        is spent) finish here instead of moving — they have nothing left to
+        generate, and re-running them would append past EOS."""
+        finished: list[Request] = []
+        if drain:
+            finished += self.drain()
+        else:
+            self._ring.clear()
+        moved: list[Request] = []
+        sched = self.scheduler
+        for r in list(sched.active) + list(sched.waiting):
+            if r.state in (State.FINISHED, State.DISCARDED, State.REJECTED):
+                continue
+            if r.slot >= 0:
+                self.slot_free.append(r.slot)
+                self._pos[r.slot] = 0
+                if drain:
+                    # a live device: clear the slot length for reuse.  On
+                    # the failure path the device is gone — skip the op.
+                    self.cache_len = self.cache_len.at[r.slot].set(0)
+                r.slot = -1
+            self.kv.free(r.rid)
+            folded = r.checkpoint_redispatch()
+            if r.state == State.FINISHED:
+                # EOS/budget already committed: finished at the checkpoint
+                r.finished_at = self._clock()
+                finished.append(r)
+                continue
+            self.stats.evacuated_requests += 1
+            self.stats.evacuated_tokens += folded
+            moved.append(r)
+        sched.active = []
+        sched.waiting.clear()
+        return finished, moved
+
     def step(self, plan: BatchPlan) -> list[Request]:
         self.stats.iterations += 1
         self.stats.dense_batch_hist[plan.dense_batch] = \
@@ -797,7 +856,7 @@ class ServeEngine:
             self.scheduler.mark_launched(plan)
             sampled = self._step_legacy(plan)
             now = time.perf_counter()
-            finished = self.scheduler.commit(plan, sampled, now)
+            finished = self.scheduler.commit(plan, sampled, self._clock())
             for r in finished:
                 self._finalize(r)
             self.stats.host_time += time.perf_counter() - now
@@ -838,7 +897,7 @@ class ServeEngine:
                 self.stats.decode_tokens += n_acc - 1
             else:
                 sampled[rid] = int(payload[s, 0])
-        finished = self.scheduler.commit(inf.plan, sampled, t1)
+        finished = self.scheduler.commit(inf.plan, sampled, self._clock())
         for r in finished:
             self._finalize(r)
         if self.spec_k:

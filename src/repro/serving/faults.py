@@ -1,0 +1,123 @@
+"""Deterministic fault-injection (chaos) harness for the replica pool.
+
+A ``FaultPlan`` is a list of events indexed by the pool's *tick counter*
+(one tick = one sweep where every live replica steps once), not wall time —
+so a seeded plan perturbs the exact same iteration every run and the chaos
+exactness tests in ``tests/test_fault_tolerance.py`` can compare a killed
+pool against an unperturbed one token-for-token.
+
+Event kinds:
+
+  * ``kill``    — replica dies abruptly: in-flight (uncommitted) work is
+                  lost, committed tokens are checkpointed and re-dispatched.
+  * ``stall``   — replica freezes for ``arg`` ticks (network partition /
+                  preemption): it holds its work but steps nothing; the
+                  router marks it suspect and the pool's per-request
+                  timeouts fire if the stall outlives them.
+  * ``degrade`` — replica only steps every ``arg``-th tick (thermal
+                  throttle / noisy neighbor): straggler EMA sheds load.
+  * ``join``    — a fresh replica is added (elastic scale-up).
+  * ``leave``   — graceful drain-and-evacuate departure (scale-down).
+
+Spec strings (``--fault-plan``) are comma-separated ``kind@tick[:rN][:arg]``:
+
+    kill@40:r1  stall@10:r0:20  degrade@5:r1:3  join@60  leave@80:r0
+
+``FaultPlan.seeded`` draws a reproducible random plan from a seed for
+soak-style chaos runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+
+KINDS = ("kill", "stall", "degrade", "join", "leave")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    tick: int
+    kind: str          # one of KINDS
+    replica: int = 0   # target replica index (ignored for join)
+    arg: int = 0       # stall: duration ticks; degrade: step-every-N
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+        if self.tick < 0:
+            raise ValueError("fault tick must be >= 0")
+
+    def describe(self) -> str:
+        base = f"{self.kind}@{self.tick}:r{self.replica}"
+        return f"{base}:{self.arg}" if self.arg else base
+
+
+class FaultPlan:
+    def __init__(self, events: list[FaultEvent] = ()):  # type: ignore[assignment]
+        self.events = sorted(events, key=lambda e: (e.tick, e.kind))
+        self._fired: set[int] = set()
+
+    def __bool__(self) -> bool:
+        return bool(self.events)
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def due(self, tick: int) -> list[FaultEvent]:
+        """Events that fire at or before ``tick``, each delivered once."""
+        out = []
+        for i, ev in enumerate(self.events):
+            if ev.tick <= tick and i not in self._fired:
+                self._fired.add(i)
+                out.append(ev)
+        return out
+
+    def reset(self) -> None:
+        self._fired.clear()
+
+    @classmethod
+    def parse(cls, spec: str) -> "FaultPlan":
+        """Parse ``kind@tick[:rN][:arg]`` comma-separated event specs."""
+        events = []
+        for part in spec.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            head, _, rest = part.partition("@")
+            kind = head.strip()
+            fields = rest.split(":")
+            if not fields[0]:
+                raise ValueError(f"fault event {part!r} missing @tick")
+            tick = int(fields[0])
+            replica, arg = 0, 0
+            for f in fields[1:]:
+                f = f.strip()
+                if f.startswith("r"):
+                    replica = int(f[1:])
+                else:
+                    arg = int(f)
+            if kind == "stall" and arg <= 0:
+                arg = 10
+            if kind == "degrade" and arg <= 1:
+                arg = 2
+            events.append(FaultEvent(tick=tick, kind=kind,
+                                     replica=replica, arg=arg))
+        return cls(events)
+
+    @classmethod
+    def seeded(cls, seed: int, n_events: int, horizon: int,
+               n_replicas: int, kinds: tuple[str, ...] = KINDS) \
+            -> "FaultPlan":
+        """Reproducible random plan: same (seed, args) -> same events."""
+        rng = random.Random(seed)
+        events = []
+        for _ in range(n_events):
+            kind = rng.choice(kinds)
+            events.append(FaultEvent(
+                tick=rng.randrange(1, max(horizon, 2)), kind=kind,
+                replica=rng.randrange(max(n_replicas, 1)),
+                arg=rng.randrange(2, 8)))
+        return cls(events)
+
+    def describe(self) -> str:
+        return ",".join(e.describe() for e in self.events)

@@ -2,114 +2,263 @@
 
 At 1000+ nodes the serving fleet is many independent NanoFlow engines (the
 ``pod`` mesh axis / separate pods).  This router implements the paper §4.1
-deployment box around them:
+deployment box around them (DESIGN.md §14):
 
   * **load-aware dispatch**: requests go to the replica with the lowest
-    estimated backlog (queued prefill tokens + active decode slots),
-  * **straggler routing**: replicas report EMA step times; slow replicas
-    receive proportionally less work (distributed/elastic.StragglerMitigator
-    policy applied to request streams),
-  * **failure handling**: a dead replica's queued (not yet prefilled)
-    requests are re-dispatched; in-flight requests are retried once.
+    estimated backlog — queued prompt tokens *plus* launched-but-uncommitted
+    tokens (§10 async depth keeps up to ``depth`` iterations of samples in
+    flight; counting only committed work would make a saturated pipelined
+    replica look idle) — scaled by straggler speed shares and penalized by
+    KV-pool pressure,
+  * **session affinity**: a multi-turn session is pinned to the replica
+    holding its prefix-cached KV (§12) until that replica dies or its KV
+    pool saturates,
+  * **failure handling**: a replica marked dead is never selected again;
+    ``mark_failed`` evacuates its *entire* backlog — queued AND in-flight
+    requests, checkpointed so committed tokens replay as a forced prefix —
+    and re-enters each survivor into the dispatch path exactly once
+    (falling back to a pending queue when no live replica exists, so work
+    is parked, never dropped).
 
 The router is engine-agnostic: it only needs ``submit`` + queue metrics, so
-the same logic drives real pods on a cluster.
+the same logic drives real pods on a cluster.  Engine-backed handles read
+their metrics straight off the engine's scheduler/KV state.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
+from typing import Optional
+
 from repro.distributed.elastic import StragglerMitigator
 from repro.serving.request import Request, State
+
+_DONE = (State.FINISHED, State.DISCARDED, State.REJECTED)
+
+
+class NoLiveReplicas(RuntimeError):
+    """Raised by ``submit`` when every replica is dead (callers with a
+    shed/park policy — the pool — catch this; it never hangs)."""
 
 
 @dataclasses.dataclass
 class ReplicaStats:
-    queued_tokens: int = 0
+    queued_tokens: int = 0       # prompt tokens not yet launched
+    inflight_tokens: int = 0     # launched-but-uncommitted (§10 pipeline)
     active_requests: int = 0
+    kv_used_frac: float = 0.0    # device KV pool pressure [0, 1]
     ema_step_s: float = 0.0
     alive: bool = True
 
+    @property
+    def backlog_tokens(self) -> int:
+        """Work ahead of a newly routed request: queued + in-flight."""
+        return self.queued_tokens + self.inflight_tokens
+
 
 class ReplicaHandle:
-    """Wraps one engine (or a remote pod endpoint)."""
+    """Wraps one engine (or a remote pod endpoint).
+
+    Chaos/runtime state (``stall_until``, ``degrade``, ``suspect``) is
+    driven by the pool's fault harness; the router only reads ``alive`` and
+    ``suspect`` (a stalled-but-alive replica should not receive retries)."""
 
     def __init__(self, rid: int, engine=None):
         self.rid = rid
         self.engine = engine
         self.alive = True
-        self.assigned: list[Request] = []
+        self.suspect = False      # stalled/degraded: deprioritized, not dead
+        self.stall_until = 0      # pool tick until which steps are skipped
+        self.degrade = 1          # step only every `degrade` pool ticks
+        self.assigned: dict[int, Request] = {}
+
+    def _prune(self) -> None:
+        self.assigned = {rid: r for rid, r in self.assigned.items()
+                         if r.state not in _DONE}
 
     def stats(self) -> ReplicaStats:
         if not self.alive:
             return ReplicaStats(alive=False)
         if self.engine is None:
+            self._prune()
+            reqs = list(self.assigned.values())
             return ReplicaStats(
-                queued_tokens=sum(r.prefill_remaining for r in self.assigned),
-                active_requests=len(self.assigned))
+                queued_tokens=sum(r.prefill_unlaunched for r in reqs),
+                inflight_tokens=sum(r.inflight for r in reqs),
+                active_requests=len(reqs))
         sched = self.engine.scheduler
-        queued = sum(r.prefill_remaining for r in sched.waiting) + \
-            sum(r.prefill_remaining for r in sched.active)
-        return ReplicaStats(queued_tokens=queued,
-                            active_requests=sched.n_active + sched.n_waiting)
+        queued = sum(r.prefill_unlaunched for r in sched.waiting) + \
+            sum(r.prefill_unlaunched for r in sched.active)
+        # launched-but-uncommitted: in-flight sampled tokens plus prefill
+        # chunks past the committed boundary — the §10 pipeline's hidden
+        # occupancy (committed-only metrics made a depth-k replica whose
+        # every token was in flight look idle)
+        inflight = sum(r.inflight + (r.prefill_launched - r.prefill_done)
+                       for r in sched.active)
+        kvs = self.engine.kv.stats
+        return ReplicaStats(
+            queued_tokens=queued, inflight_tokens=inflight,
+            active_requests=sched.n_active + sched.n_waiting,
+            kv_used_frac=kvs.device_pages_used
+            / max(kvs.device_pages_total, 1))
 
     def submit(self, req: Request) -> None:
-        self.assigned.append(req)
+        req.replica = self.rid
+        self.assigned[req.rid] = req
         if self.engine is not None:
             self.engine.submit(req)
+
+    def evacuate(self, *, drain: bool) \
+            -> tuple[list[Request], list[Request]]:
+        """Checkpoint-and-collect the whole backlog: ``(finished, moved)``.
+        Engine-backed handles delegate to ``ServeEngine.evacuate`` (which
+        releases slots/KV); engine-less handles checkpoint their assigned
+        list directly."""
+        if self.engine is not None:
+            finished, moved = self.engine.evacuate(drain=drain)
+        else:
+            finished, moved = [], []
+            for r in self.assigned.values():
+                if r.state in _DONE:
+                    continue
+                r.checkpoint_redispatch()
+                (finished if r.state == State.FINISHED else moved).append(r)
+        self.assigned = {}
+        return finished, moved
 
 
 class Router:
     def __init__(self, replicas: list[ReplicaHandle],
-                 straggler_alpha: float = 0.2):
+                 straggler_alpha: float = 0.2, affinity: bool = True,
+                 decode_cost: int = 64, kv_spill: float = 0.9):
         assert replicas
-        self.replicas = replicas
+        self.replicas = list(replicas)
+        self.straggler_alpha = straggler_alpha
         self.straggler = StragglerMitigator(len(replicas),
                                             alpha=straggler_alpha)
+        self.affinity = affinity
+        self.decode_cost = decode_cost
+        # KV pressure above this fraction breaks session affinity and
+        # multiplies the replica's dispatch cost (pressure-aware routing)
+        self.kv_spill = kv_spill
+        self._session: dict[int, int] = {}     # session key -> replica idx
+        # orphans with no live replica to take them: parked, never dropped;
+        # drained by flush_pending() when capacity returns (join/recovery)
+        self.pending: deque[Request] = deque()
         self.dispatched = 0
         self.redispatched = 0
 
     # ---- dispatch ----------------------------------------------------------
     def submit(self, req: Request) -> int:
-        """Route to argmin of (backlog / speed-share).  Returns replica id."""
-        shares = self.straggler.shares()
-        best, best_cost = None, None
-        for i, rep in enumerate(self.replicas):
-            if not rep.alive:
-                continue
-            st = rep.stats()
-            backlog = st.queued_tokens + 64 * st.active_requests \
-                + req.prompt_len
-            cost = backlog / max(shares[i], 1e-9)
-            if best_cost is None or cost < best_cost:
-                best, best_cost = i, cost
+        """Route to the cheapest live replica (see ``_select``).  Returns
+        the replica index; raises ``NoLiveReplicas`` when none is alive."""
+        best = self._select(req)
         if best is None:
-            raise RuntimeError("no live replicas")
-        self.replicas[best].submit(req)
-        self.dispatched += 1
+            raise NoLiveReplicas("no live replicas")
+        self._place(req, best)
         return best
+
+    def _select(self, req: Request) -> Optional[int]:
+        # session affinity: a pinned replica keeps the session's cached
+        # prefix (§12) — stay there unless it died or its KV pool is full
+        if self.affinity and req.session is not None:
+            rid = self._session.get(req.session)
+            if rid is not None:
+                rep = self.replicas[rid]
+                if rep.alive and not rep.suspect \
+                        and rep.stats().kv_used_frac < self.kv_spill:
+                    return rid
+        # two passes: suspect (stalled/degraded) replicas only get work
+        # when no healthy replica exists
+        for include_suspect in (False, True):
+            shares = self.straggler.shares()
+            best, best_cost = None, None
+            for i, rep in enumerate(self.replicas):
+                if not rep.alive or (rep.suspect and not include_suspect):
+                    continue
+                st = rep.stats()
+                backlog = (st.backlog_tokens
+                           + self.decode_cost * st.active_requests
+                           + req.prompt_len)
+                cost = backlog / max(shares[i], 1e-9)
+                if st.kv_used_frac >= self.kv_spill:
+                    cost *= 1.0 + 4.0 * (st.kv_used_frac - self.kv_spill)
+                if best_cost is None or cost < best_cost:
+                    best, best_cost = i, cost
+            if best is not None:
+                return best
+        return None
+
+    def _place(self, req: Request, rid: int) -> None:
+        if self.affinity and req.session is not None:
+            self._session[req.session] = rid
+        self.replicas[rid].submit(req)
+        self.dispatched += 1
+
+    def flush_pending(self) -> list[Request]:
+        """Re-enter parked orphans once a live replica exists (called on
+        join and every pool tick).  Stops at the first un-routable request
+        so ordering is preserved."""
+        placed = []
+        while self.pending:
+            req = self.pending[0]
+            best = self._select(req)
+            if best is None:
+                break
+            self.pending.popleft()
+            self._place(req, best)
+            placed.append(req)
+        return placed
+
+    # ---- membership --------------------------------------------------------
+    def add_replica(self, handle: ReplicaHandle) -> int:
+        """Replica join: the straggler state is rebuilt for the new fleet
+        size (EMA restarts — a freshly joined replica has no history) and
+        parked work is flushed onto the added capacity."""
+        self.replicas.append(handle)
+        self.straggler = StragglerMitigator(len(self.replicas),
+                                            alpha=self.straggler_alpha)
+        self.flush_pending()
+        return len(self.replicas) - 1
 
     # ---- health ------------------------------------------------------------
     def observe_step_times(self, times: list[float]) -> None:
         self.straggler.observe(times)
 
-    def mark_failed(self, rid: int) -> list[Request]:
-        """Kill a replica; re-dispatch its un-prefilled requests."""
+    def retire_replica(self, rid: int, *, drain: bool) \
+            -> tuple[list[Request], list[Request]]:
+        """Shared failure/graceful-leave path: mark the replica dead,
+        evacuate its entire backlog (queued and in-flight), and re-enter
+        every still-unfinished request into the dispatch path **exactly
+        once** (the evacuation clears the replica's queues, so a second
+        call finds nothing).  Returns ``(finished, moved)`` — requests that
+        finished at the checkpoint (committed EOS / spent budget, plus
+        drained completions on the graceful path) and requests moved to
+        other replicas or parked in ``pending``."""
         rep = self.replicas[rid]
+        if not rep.alive:
+            return [], []
         rep.alive = False
-        orphans = [r for r in rep.assigned
-                   if r.state in (State.WAITING, State.PREFILL)]
-        rep.assigned = []
+        finished, orphans = rep.evacuate(drain=drain)
+        self._session = {k: v for k, v in self._session.items() if v != rid}
         moved = []
         for r in orphans:
-            r.state = State.WAITING
-            r.prefill_done = 0
-            r.prefill_launched = 0
-            r.inflight = 0
-            r.output = []
-            r.slot = -1
-            self.submit(r)
             self.redispatched += 1
+            r.retries += 1
+            best = self._select(r)
+            if best is None:
+                self.pending.append(r)
+            else:
+                self._place(r, best)
             moved.append(r)
+        return finished, moved
+
+    def mark_failed(self, rid: int) -> list[Request]:
+        """Kill a replica; re-dispatch its queued *and* in-flight requests
+        (committed tokens checkpointed as a forced replay prefix).  Returns
+        the moved requests; checkpoint-finished ones are retrievable from
+        the pool path (``retire_replica``)."""
+        _, moved = self.retire_replica(rid, drain=False)
         return moved
 
     @property

@@ -49,3 +49,87 @@ def test_no_live_replicas_raises():
     router.mark_failed(0)
     with pytest.raises(RuntimeError):
         router.submit(Request(rid=99, prompt=[1, 2], max_new_tokens=2))
+
+
+def test_dead_replica_never_selected_backlog_reenters_once():
+    """Satellite: alive=False is terminal for selection, and the dead
+    replica's backlog re-enters the dispatch path exactly once — a second
+    retirement finds nothing to move."""
+    router = Router([ReplicaHandle(i) for i in range(3)])
+    for r in _reqs(12):
+        router.submit(r)
+    moved = router.mark_failed(1)
+    assert len(moved) == len({r.rid for r in moved}) > 0
+    assert router.replicas[1].stats().alive is False
+    assert router.mark_failed(1) == []            # exactly once
+    assert router.redispatched == len(moved)
+    for r in _reqs(50):
+        assert router.submit(r) != 1
+
+
+def test_orphans_park_in_pending_when_no_live_replica():
+    """A failure with no survivors parks the backlog instead of dropping
+    it; a joining replica drains the parked queue."""
+    router = Router([ReplicaHandle(0)])
+    reqs = _reqs(5)
+    for r in reqs:
+        router.submit(r)
+    moved = router.mark_failed(0)
+    assert len(router.pending) == len(moved) == 5  # parked, not lost
+    router.add_replica(ReplicaHandle(1))
+    assert not router.pending
+    assert len(router.replicas[1].assigned) == 5
+
+
+def test_session_affinity_sticks_until_failure():
+    router = Router([ReplicaHandle(i) for i in range(3)])
+    first = router.submit(Request(rid=0, prompt=[1] * 8, max_new_tokens=2,
+                                  session=42))
+    # pile unrelated load elsewhere -> affinity must still win
+    for r in _reqs(9):
+        router.submit(r)
+    again = router.submit(Request(rid=100, prompt=[1] * 8, max_new_tokens=2,
+                                  session=42))
+    assert again == first
+    router.mark_failed(first)
+    rebound = router.submit(Request(rid=101, prompt=[1] * 8,
+                                    max_new_tokens=2, session=42))
+    assert rebound != first
+
+
+def test_engine_backed_stats_count_inflight_tokens():
+    """Satellite: ReplicaStats for an engine-backed handle must include
+    launched-but-uncommitted tokens — at async depth 1 a replica whose
+    every sample is in flight is busy, not idle."""
+    import dataclasses as _dc
+
+    import jax as _jax
+
+    from repro.configs import get_config as _get
+    from repro.models import model as _model
+    from repro.serving.config import EngineConfig as _EC
+    from repro.serving.engine import ServeEngine as _SE
+
+    cfg = _dc.replace(_get("tiny-toy"), dtype="float32")
+    params = _model.init(cfg, _jax.random.PRNGKey(0))
+    eng = _SE(cfg, params, _EC(max_slots=2, max_len=32, kv_block_size=8,
+                               discrete_sizes=(8,), async_depth=1,
+                               avg_decode_len=4.0))
+    handle = ReplicaHandle(0, eng)
+    handle.submit(Request(rid=0, prompt=[1, 2, 3, 4, 5, 6, 7, 8],
+                          max_new_tokens=4))
+    # step until the prompt is fully launched and a decode token is in
+    # flight (depth 1: launched, not yet committed)
+    for _ in range(8):
+        plan = eng.scheduler.plan()
+        if plan is None:
+            break
+        eng.step(plan)
+        st = handle.stats()
+        if st.inflight_tokens > 0:
+            break
+    st = handle.stats()
+    assert st.inflight_tokens > 0, "in-flight work invisible to the router"
+    assert st.backlog_tokens >= st.inflight_tokens
+    eng.drain()
+    assert handle.stats().inflight_tokens == 0
