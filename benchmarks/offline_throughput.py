@@ -447,19 +447,125 @@ def engine_spec_ab(n_requests: int = 10, spec_k: int = 4,
     return rows
 
 
+def _kvdtype_logit_drift(cfg, max_len: int = 48) -> float:
+    """Teacher-forced packed forward, native vs int8 cache, f32 weights —
+    the max |Δlogit| sample reported in the A/B (and stashed into
+    ``EngineStats.kv_quant_drift``).  f32 isolates quantization drift from
+    bf16 accumulation noise."""
+    import jax.numpy as jnp
+    fcfg = dataclasses.replace(cfg, dtype="float32")
+    params = model.init(fcfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, fcfg.vocab_size, size=24).astype(np.int32)
+    t = len(prompt)
+    tok = jnp.asarray(prompt)[None]
+    pos = jnp.arange(t, dtype=jnp.int32)
+    slot = jnp.zeros(t, jnp.int32)
+    act = jnp.ones(t, jnp.int32)
+    outs = {}
+    for kd in (None, "int8"):
+        cache = model.init_cache(fcfg, 1, 2, max_len, kd)
+        logits, _ = model.forward_packed(fcfg, params, tok, cache, slot,
+                                         pos, pos, act, kv_bucket=max_len)
+        outs[kd] = np.asarray(logits, np.float32)
+    return float(np.abs(outs[None] - outs["int8"]).max())
+
+
+def engine_kvdtype_ab(n_requests: int = 10,
+                      base: EngineConfig = EngineConfig()) -> list[dict]:
+    """int8 KV-cache axis (DESIGN.md §15): the async packed step with the
+    native bf16 cache vs the quantized int8 cache, at the SAME
+    ``kv_budget_bytes`` — the quantized engine's pages budget admits ~2x
+    the token rows, which is the whole point (Eq. 5: B_req scales with KV
+    capacity).  head_dim 128 (the production shape) so the f32 scale
+    overhead is 4/128 per element and the ratio clears 1.9x.  Reported per
+    mode: tokens/s, device pages / max concurrent full-length slots at the
+    fixed budget, attention HBM bytes/iteration from the cost-model byte
+    rate (swept KV rows × eval_shape bytes/token-row), the bytes-saved
+    counter, a teacher-forced max-logit-drift sample, and the greedy
+    token-match fraction vs the native engine."""
+    from repro.serving.engine import kv_bytes_per_token
+    cfg = dataclasses.replace(get_config("tiny-toy"), head_dim=128)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    name, p, d, max_len = "sharegpt-like", 12, 8, 128
+    budget = kv_bytes_per_token(cfg) * 8 * max_len   # 8 native-rate slots
+    drift = _kvdtype_logit_drift(cfg)
+    rows, raw, outs = [], {}, {}
+    for kd in ("bf16", "int8"):
+        ecfg = dataclasses.replace(
+            base, max_slots=8, max_len=max_len,
+            discrete_sizes=(64, 32, 16, 8), avg_decode_len=float(d),
+            step_mode="packed", async_depth=1, prefill_mode="incremental",
+            kv_bucketing=True, prefix_caching=False, tp=1, spec_k=0,
+            total_pages=None, kv_budget_bytes=budget, kv_dtype=kd)
+        eng = ServeEngine(cfg, params, ecfg)
+        # warmup: identical workload -> compiles every (T, kv) program
+        _submit_workload(eng, name, p, d, n_requests, cfg.vocab_size, 0)
+        eng.run()
+        warm = eng.stats.snapshot()
+        _submit_workload(eng, name, p, d, n_requests, cfg.vocab_size,
+                         n_requests)
+        done = eng.run()
+        if kd == "int8":
+            eng.stats.kv_quant_drift = drift
+        st = eng.stats.snapshot()
+        outs[kd] = {r.rid: tuple(r.output) for r in done}
+        tokens = st["total_tokens"] - warm["total_tokens"]
+        wall = st["wall_time"] - warm["wall_time"]
+        iters = st["iterations"] - warm["iterations"]
+        kv_rows = st["packed_attn_kv_rows"] - warm["packed_attn_kv_rows"]
+        pages = eng.kv.stats.device_pages_total
+        raw[kd] = {"tok_s": tokens / max(wall, 1e-9), "pages": pages}
+        rows.append({
+            "bench": "offline_throughput_engine",
+            "case": f"tiny-toy-hd128/{name}/kv-{kd}",
+            "kv_dtype": kd,
+            "finished": len(done),
+            "tokens": tokens,
+            "tok_s_cpu": round(raw[kd]["tok_s"], 1),
+            "iters": iters,
+            "dispatches_per_iter": round(
+                (st["model_dispatches"] - warm["model_dispatches"])
+                / max(iters, 1), 3),
+            "host_syncs_per_iter": round(
+                (st["host_syncs"] - warm["host_syncs"]) / max(iters, 1), 3),
+            "kv_budget_bytes": budget,
+            "kv_bytes_per_token": eng.kv.bytes_per_token,
+            "device_pages_total": pages,
+            "max_full_len_slots": pages * eng.kv.page_size // max_len,
+            "attn_kv_bytes_per_iter": round(
+                kv_rows * eng.kv.bytes_per_token / max(iters, 1)),
+            "kv_quant_bytes_saved": (st["kv_quant_bytes_saved"]
+                                     - warm["kv_quant_bytes_saved"]),
+            "max_logit_drift_f32": round(drift, 5) if kd == "int8" else 0.0,
+        })
+    match = [rid for rid in outs["bf16"]
+             if outs["bf16"][rid] == outs["int8"].get(rid)]
+    rows[-1]["pages_ratio_vs_bf16"] = round(
+        raw["int8"]["pages"] / max(raw["bf16"]["pages"], 1), 3)
+    rows[-1]["speedup_vs_bf16"] = round(
+        raw["int8"]["tok_s"] / max(raw["bf16"]["tok_s"], 1e-9), 3)
+    rows[-1]["greedy_match_frac"] = round(
+        len(match) / max(len(outs["bf16"]), 1), 3)
+    return rows
+
+
 def run(engine_only: bool = False, base: EngineConfig = EngineConfig(),
         tp: int = 1, tp_only: bool = False,
-        spec_only: bool = False) -> list[dict]:
+        spec_only: bool = False, kvdtype_only: bool = False) -> list[dict]:
     if tp_only:
         return engine_tp_ab(tp)
     if spec_only:
         return engine_spec_ab(base=base)
+    if kvdtype_only:
+        return engine_kvdtype_ab(base=base)
     out = [] if engine_only else (
         modeled("llama2-70b", cm.A100_80G, 8)
         + modeled("qwen3-8b", cm.TPU_V5E, 16))
     out += engine_measured(base=base)
     out += engine_prefix_ab(base=base)
     out += engine_spec_ab(base=base)
+    out += engine_kvdtype_ab(base=base)
     if tp > 1:
         out += engine_tp_ab(tp)
     return out
@@ -483,6 +589,11 @@ def main(argv=None) -> None:
                     help="run only the speculative-decoding A/B rows "
                          "(DESIGN.md §13: n-gram drafts vs plain packed "
                          "engine on a repetitive-text workload)")
+    ap.add_argument("--kvdtype-only", action="store_true",
+                    help="run only the int8-KV A/B rows (DESIGN.md §15: "
+                         "bf16 vs int8 cache at the same kv_budget_bytes — "
+                         "pages admitted, tok/s, attention bytes/iter, "
+                         "logit drift, greedy match)")
     # engine knobs are defined ONCE on EngineConfig (--tp, --attn-fast,
     # --attn-stream, ... — the same surface as launch/serve.py); the mode
     # matrices pin their own A/B axes on top of this base
@@ -497,7 +608,8 @@ def main(argv=None) -> None:
         ensure_host_devices(args.tp)
     rows = run(engine_only=args.engine_only,
                base=EngineConfig.from_args(args), tp=args.tp,
-               tp_only=args.tp_only, spec_only=args.spec_only)
+               tp_only=args.tp_only, spec_only=args.spec_only,
+               kvdtype_only=args.kvdtype_only)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(rows, f, indent=2)
@@ -523,6 +635,22 @@ def main(argv=None) -> None:
                   f"{r['host_syncs_per_iter']} sync/it, "
                   f"{r['decode_tokens_per_dispatch']} decode tok/dispatch"
                   f"{spec}){extra}")
+        elif "kv_dtype" in r:
+            extra = ""
+            if "pages_ratio_vs_bf16" in r:
+                extra = (f" [{r['pages_ratio_vs_bf16']}x pages, "
+                         f"{r['speedup_vs_bf16']}x tok/s vs bf16, "
+                         f"greedy match {r['greedy_match_frac']}, "
+                         f"drift {r['max_logit_drift_f32']}]")
+            print(f"fig10/{r['case']},0.0,{r['tok_s_cpu']} tok/s CPU "
+                  f"({r['tokens']} tokens, {r['iters']} iters, "
+                  f"{r['dispatches_per_iter']} disp/it, "
+                  f"{r['host_syncs_per_iter']} sync/it, "
+                  f"{r['device_pages_total']} pages / "
+                  f"{r['max_full_len_slots']} full-len slots @ fixed "
+                  f"budget, {r['attn_kv_bytes_per_iter'] / 1e3:.1f} KB "
+                  f"attn/it, saved {r['kv_quant_bytes_saved'] / 1e3:.0f} KB)"
+                  f"{extra}")
         elif "prefix_hit_frac" in r:
             extra = ""
             if "prefill_flops_ratio_vs_no_prefix" in r:

@@ -87,19 +87,41 @@ class ModelStats:
     r_gqa: float             # q heads per kv head
     kv_per_token: int        # KV-cache elements per token (all layers)
     dtype_bytes: int = 2
+    # bytes per stored KV element (DESIGN.md §15).  Equals ``dtype_bytes``
+    # for native caches; for int8 it is <~1.1: one byte per element plus the
+    # amortized f32 per-(row, kv-head) scale overhead.  Weight/activation
+    # terms keep using ``dtype_bytes`` — only the cache residency (e_kv) and
+    # the KV streaming terms (DecodeAttention, prefill KV write) see it.
+    kv_bytes_per_elem: float = 0.0
+
+    def __post_init__(self):
+        if self.kv_bytes_per_elem == 0.0:
+            object.__setattr__(self, "kv_bytes_per_elem",
+                               float(self.dtype_bytes))
 
 
-def model_stats(cfg: ModelConfig) -> ModelStats:
+def model_stats(cfg: ModelConfig,
+                kv_dtype: Optional[str] = None) -> ModelStats:
+    """``kv_dtype`` mirrors ``EngineConfig.kv_dtype``: None/"bf16" keeps the
+    serving dtype for the cache; "int8" prices the quantized layout —
+    1 B/element plus one f32 scale per (row, kv-head) for GQA or per row
+    (latent + rope leaves) for absorbed MLA."""
     from repro.models.model import active_params, num_params
     kv_elems = 0
+    kv_bytes = 0.0
     hd = cfg.resolved_head_dim
     for spec in cfg.layer_specs():
         if spec.mixer == ATTN:
             if cfg.mla is not None:
-                kv_elems += cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim
+                e = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim
+                s = 2                       # c_kv + k_rope scale rows
             else:
-                kv_elems += 2 * cfg.n_kv_heads * hd
+                e = 2 * cfg.n_kv_heads * hd
+                s = 2 * cfg.n_kv_heads      # k + v scale per kv head
+            kv_elems += e
+            kv_bytes += e * 1 + s * 4       # int8 pricing (scales are f32)
         # recurrent mixers hold O(1) state — no per-token KV
+    dt = 2 if cfg.dtype in ("bfloat16", "float16") else 4
     return ModelStats(
         p_model=num_params(cfg),
         p_active=active_params(cfg),
@@ -107,7 +129,9 @@ def model_stats(cfg: ModelConfig) -> ModelStats:
         n_layers=cfg.n_layers,
         r_gqa=cfg.n_heads / max(cfg.n_kv_heads, 1),
         kv_per_token=kv_elems,
-        dtype_bytes=2 if cfg.dtype in ("bfloat16", "float16") else 4,
+        dtype_bytes=dt,
+        kv_bytes_per_elem=(kv_bytes / kv_elems
+                           if kv_dtype == "int8" and kv_elems else float(dt)),
     )
 
 
@@ -115,8 +139,13 @@ def model_stats(cfg: ModelConfig) -> ModelStats:
 # Eqs. 1–9
 # ---------------------------------------------------------------------------
 def e_kv(hw: Hardware, ms: ModelStats, n_dev: int) -> float:
-    """Max KV-cache elements the cluster can hold (Appendix A)."""
-    return max(n_dev * hw.mem_size / ms.dtype_bytes - ms.p_model, 0.0)
+    """Max KV-cache elements the cluster can hold (Appendix A).
+
+    Weights stay at ``dtype_bytes``; the leftover bytes are divided by the
+    cache's *storage* rate (``kv_bytes_per_elem``), so an int8 cache holds
+    ~2x the elements at the same residency (DESIGN.md §15)."""
+    free = n_dev * hw.mem_size - ms.p_model * ms.dtype_bytes
+    return max(free / ms.kv_bytes_per_elem, 0.0)
 
 
 def b_req(hw: Hardware, ms: ModelStats, w: Workload, n_dev: int) -> float:
@@ -197,14 +226,18 @@ class OpCost:
 
 
 def op_costs(cfg: ModelConfig, w: Workload, hw: Hardware, n_dev: int,
-             bdense: Optional[float] = None) -> list[OpCost]:
+             bdense: Optional[float] = None,
+             kv_dtype: Optional[str] = None) -> list[OpCost]:
     """NanoFlow Table-2-style per-op breakdown, generalized over configs.
 
     All quantities are *global* (whole iteration across all layers / devices);
     divide by n_dev for per-device.  Decode attention loads the entire KV
     cache once (paper's model); prefill attention is quadratic in p.
+    ``kv_dtype="int8"`` prices the quantized cache (DESIGN.md §15): more
+    resident elements at fewer bytes each, so DecodeAttention streams the
+    bigger cache at the int8 rate and prefill's KV writes shrink.
     """
-    ms = model_stats(cfg)
+    ms = model_stats(cfg, kv_dtype)
     dt = ms.dtype_bytes
     bd = bdense if bdense is not None else b_dense(hw, ms, w, n_dev)
     breq = b_req(hw, ms, w, n_dev)
@@ -271,14 +304,19 @@ def op_costs(cfg: ModelConfig, w: Workload, hw: Hardware, n_dev: int,
 
     # ---- attention ----
     if ms.kv_per_token:
-        # decode attention: stream the whole KV cache (memory-bound GEMV)
-        kv_bytes = e_kv(hw, ms, n_dev) * dt
+        # decode attention: stream the whole KV cache (memory-bound GEMV).
+        # Bytes use the cache *storage* rate — int8 streams ~2x the elements
+        # at ~half the bytes each, so the byte term is ~unchanged while the
+        # resident batch (b_req) doubles (DESIGN.md §15).
+        kv_bytes = e_kv(hw, ms, n_dev) * ms.kv_bytes_per_elem
         dec_flops = 2 * e_kv(hw, ms, n_dev) * ms.r_gqa
         costs.append(OpCost("DecodeAttention", "memory", dec_flops, kv_bytes, 0))
         # prefill attention: (B_req/(d+1)) requests of p tokens, 4·p²·D per layer
         n_prefill = breq / (w.d + 1)
         pf_flops = 4 * n_prefill * w.p * w.p * d * L
-        pf_bytes = n_prefill * w.p * (2 * ms.kv_per_token / L + 2 * nh * hd) * dt * L
+        pf_bytes = n_prefill * w.p * (
+            2 * (ms.kv_per_token / L) * ms.kv_bytes_per_elem
+            + 2 * nh * hd * dt) * L
         costs.append(OpCost("PrefillAttention", "compute", pf_flops, pf_bytes, 0))
     else:
         # recurrent mixers: state update streams the state per token
@@ -300,10 +338,11 @@ def op_costs(cfg: ModelConfig, w: Workload, hw: Hardware, n_dev: int,
 
 
 def table2(cfg: ModelConfig, w: Workload, hw: Hardware, n_dev: int,
-           bdense: Optional[float] = None) -> list[dict]:
+           bdense: Optional[float] = None,
+           kv_dtype: Optional[str] = None) -> list[dict]:
     """Paper Table 2 rows: per-op estimated times + the dominant resource."""
     rows = []
-    for c in op_costs(cfg, w, hw, n_dev, bdense):
+    for c in op_costs(cfg, w, hw, n_dev, bdense, kv_dtype):
         tc, tm, tn = c.times(hw, n_dev)
         rows.append({
             "op": c.name, "kind": c.kind,

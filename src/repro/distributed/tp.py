@@ -264,13 +264,25 @@ def shard_params_tp(cfg: ModelConfig, params: dict, mesh) -> dict:
     return walk(params, defs, ())
 
 
-def _block_cache_specs(cfg: ModelConfig, spec) -> dict:
-    """PartitionSpecs per cache leaf (leading layer-stack dim included)."""
+def _block_cache_specs(cfg: ModelConfig, spec,
+                       kv_dtype: str | None = None) -> dict:
+    """PartitionSpecs per cache leaf (leading layer-stack dim included).
+    ``kv_dtype="int8"`` (DESIGN.md §15) adds the scale leaves: GQA scales
+    (L,N,S,KV) shard on the same kv-head axis as the values; MLA latent
+    scales are replicated like the latent itself."""
     if spec.mixer == ATTN:
         if cfg.mla is not None:
-            return {"c_kv": P(), "k_rope": P()}      # latent replicated
-        return {"k": P(None, None, None, "model"),   # (L,N,S,KV,hd): kv heads
-                "v": P(None, None, None, "model")}
+            out = {"c_kv": P(), "k_rope": P()}       # latent replicated
+            if kv_dtype == "int8":
+                out["c_kv_s"] = P()
+                out["k_rope_s"] = P()
+            return out
+        out = {"k": P(None, None, None, "model"),    # (L,N,S,KV,hd): kv heads
+               "v": P(None, None, None, "model")}
+        if kv_dtype == "int8":
+            out["k_s"] = P(None, None, None, "model")   # (L,N,S,KV)
+            out["v_s"] = P(None, None, None, "model")
+        return out
     if spec.mixer == MAMBA:
         return {"conv": P(None, None, None, "model"),   # (L,N,K-1,d_in)
                 "ssm": P(None, None, "model")}          # (L,N,d_in,n)
@@ -284,17 +296,20 @@ def _block_cache_specs(cfg: ModelConfig, spec) -> dict:
     raise ValueError(spec.mixer)
 
 
-def cache_pspecs_tp(cfg: ModelConfig) -> list:
-    """PartitionSpec tree matching ``model.init_cache``'s structure."""
+def cache_pspecs_tp(cfg: ModelConfig, kv_dtype: str | None = None) -> list:
+    """PartitionSpec tree matching ``model.init_cache``'s structure (pass
+    the engine's kv_dtype so the int8 scale leaves get their specs — the
+    tree is used as shard_map in_specs and must match the cache exactly)."""
     out = []
     for pattern, reps in cfg.layer_groups():
-        out.append({f"sub{i}": _block_cache_specs(cfg, spec)
+        out.append({f"sub{i}": _block_cache_specs(cfg, spec, kv_dtype)
                     for i, spec in enumerate(pattern)})
     return out
 
 
-def shard_cache_tp(cfg: ModelConfig, cache: list, mesh) -> list:
-    specs = cache_pspecs_tp(cfg)
+def shard_cache_tp(cfg: ModelConfig, cache: list, mesh,
+                   kv_dtype: str | None = None) -> list:
+    specs = cache_pspecs_tp(cfg, kv_dtype)
     out = []
     for gi, group in enumerate(cache):
         g = {}

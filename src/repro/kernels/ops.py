@@ -139,7 +139,7 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, logit_scale=None,
 
 def packed_attention(q, k_cache, v_cache, token_slot, lengths, *,
                      logit_scale=None, kv_bucket: Optional[int] = None,
-                     block_tables=None,
+                     block_tables=None, k_scale=None, v_scale=None,
                      impl: Optional[str] = None, fast: Optional[bool] = None):
     """Segment-masked attention over a token-packed stream (DESIGN.md §8):
     token t attends rows [0, lengths[t]) of slot ``token_slot[t]``'s cache.
@@ -153,18 +153,24 @@ def packed_attention(q, k_cache, v_cache, token_slot, lengths, *,
     ``block_tables`` (optional, DESIGN.md §12): block-table mode — the
     caches are physical block storage and every gather is routed through
     the per-slot table (index-map dereference in the Pallas kernel, dense
-    per-slot gather in the refs)."""
+    per-slot gather in the refs).
+
+    ``k_scale``/``v_scale`` (optional, (N_slots, S, KV) f32, DESIGN.md §15):
+    int8 caches — every impl dequantizes after the int8 read (in-register
+    in the Pallas kernel, dense in the refs)."""
     impl = _resolve(impl)
     if impl == "ref":
         fn = _ref.packed_attention_fast if _attn_fast(fast) \
             else _ref.packed_attention_ref
         return fn(q, k_cache, v_cache, token_slot, lengths,
                   logit_scale=logit_scale, kv_bucket=kv_bucket,
-                  block_tables=block_tables)
+                  block_tables=block_tables, k_scale=k_scale,
+                  v_scale=v_scale)
     from repro.kernels import packed_attention as _pa
     return _pa.packed_attention(q, k_cache, v_cache, token_slot, lengths,
                                 logit_scale=logit_scale, kv_bucket=kv_bucket,
-                                block_tables=block_tables,
+                                block_tables=block_tables, k_scale=k_scale,
+                                v_scale=v_scale,
                                 interpret=(impl == "interpret"))
 
 

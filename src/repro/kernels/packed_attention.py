@@ -18,6 +18,19 @@ instead of silently falling back to the ref.
 DESIGN.md §9): the kernel only touches ``kv_bucket`` rows per slot, so FLOPs
 and HBM traffic scale with the iteration's actual context, not ``max_len``.
 
+A bucket that is not a multiple of ``block_k`` gets a *masked partial last
+block* rather than a padded cache copy: the grid's KV dimension is
+``ceil(s / block_k)`` and the out-of-bounds tail of the final tile is
+discarded by the existing length mask (scores) plus an explicit zero-mask on
+the value rows — no O(cache) ``jnp.pad`` on the hot path (DESIGN.md §15).
+
+int8 KV (DESIGN.md §15): when ``k_scale``/``v_scale`` are passed the k/v
+tiles DMA *as stored* (int8) together with a small per-row f32 scale tile
+(same index map, ~1/head_dim the bytes), and the kernel dequantizes
+in-register — ``k_i8 * scale`` in f32 — before the flash math.  Attention
+HBM traffic drops ~2× while the grid, the scalar-prefetch index maps and
+the online-softmax scratch are unchanged.
+
 VMEM per step (bf16, Bk=256, D=128, G≤16):
   k (Bk, Dqk) + v (Bk, Dv) + q (G, Dqk) + acc f32 (G, Dv) ≈ 0.2 MB.
 """
@@ -35,8 +48,14 @@ NEG_INF = -1e30
 DEFAULT_BLOCK_K = 256
 
 
-def _kernel(slot_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
-            acc_ref, *, scale: float, block_k: int):
+def _flash_step(len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref, m_ref,
+                l_ref, acc_ref, *, scale: float, block_k: int,
+                s_valid: Optional[int]):
+    """Shared online-softmax body.  ``ks_ref``/``vs_ref`` (optional) hold the
+    per-row dequant scales; ``s_valid`` (static) is the true KV extent when
+    the last block is partial — rows >= s_valid are uninitialized DMA tail
+    and must be zeroed out of the value accumulation (their *scores* are
+    already masked: kpos >= s_valid >= lengths[t])."""
     t = pl.program_id(0)
     sb = pl.program_id(2)
     nsb = pl.num_programs(2)
@@ -53,6 +72,15 @@ def _kernel(slot_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32) * scale               # (G, Dqk)
         k = k_ref[0, 0].astype(jnp.float32)                       # (Bk, Dqk)
+        v = v_ref[0, 0].astype(jnp.float32)                       # (Bk, Dv)
+        if ks_ref is not None:
+            k = k * ks_ref[0, 0][:, None]
+        if vs_ref is not None:
+            v = v * vs_ref[0, 0][:, None]
+        if s_valid is not None:
+            vrow = sb * block_k + \
+                jax.lax.broadcasted_iota(jnp.int32, v.shape, 0)
+            v = jnp.where(vrow < s_valid, v, 0.0)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # (G, Bk)
 
         kpos = sb * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
@@ -64,8 +92,7 @@ def _kernel(slot_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
         alpha = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
         acc_ref[...] = acc_ref[...] * alpha[:, None] + \
-            jnp.dot(p, v_ref[0, 0].astype(jnp.float32),
-                    preferred_element_type=jnp.float32)
+            jnp.dot(p, v, preferred_element_type=jnp.float32)
         m_ref[...] = m_new
 
     @pl.when(sb == nsb - 1)
@@ -74,12 +101,33 @@ def _kernel(slot_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
         o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
 
 
+def _kernel(slot_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+            acc_ref, *, scale: float, block_k: int,
+            s_valid: Optional[int] = None):
+    _flash_step(len_ref, q_ref, k_ref, v_ref, None, None, o_ref, m_ref,
+                l_ref, acc_ref, scale=scale, block_k=block_k, s_valid=s_valid)
+
+
+def _kernel_quant(slot_ref, len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                  o_ref, m_ref, l_ref, acc_ref, *, scale: float, block_k: int,
+                  s_valid: Optional[int] = None):
+    _flash_step(len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref, m_ref,
+                l_ref, acc_ref, scale=scale, block_k=block_k, s_valid=s_valid)
+
+
 def _kernel_block(bt_ref, slot_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
                   m_ref, l_ref, acc_ref, *, scale: float, block_k: int):
     # block-table mode: the physical-block dereference happened in the index
     # map (bt[slot[t] * nb_cols + sb]); the flash math is identical
-    _kernel(slot_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
-            acc_ref, scale=scale, block_k=block_k)
+    _flash_step(len_ref, q_ref, k_ref, v_ref, None, None, o_ref, m_ref,
+                l_ref, acc_ref, scale=scale, block_k=block_k, s_valid=None)
+
+
+def _kernel_block_quant(bt_ref, slot_ref, len_ref, q_ref, k_ref, v_ref,
+                        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                        scale: float, block_k: int):
+    _flash_step(len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref, m_ref,
+                l_ref, acc_ref, scale=scale, block_k=block_k, s_valid=None)
 
 
 @functools.partial(jax.jit, static_argnames=("logit_scale", "kv_bucket",
@@ -89,6 +137,8 @@ def packed_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      logit_scale: Optional[float] = None,
                      kv_bucket: Optional[int] = None,
                      block_tables: Optional[jax.Array] = None,
+                     k_scale: Optional[jax.Array] = None,
+                     v_scale: Optional[jax.Array] = None,
                      block_k: int = DEFAULT_BLOCK_K,
                      interpret: bool = False) -> jax.Array:
     """q: (T, H, Dqk) packed queries; k_cache: (N_slots, S, KV, Dqk);
@@ -107,6 +157,10 @@ def packed_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     row-block ``sb``.  One extra prefetched operand, same grid, same flash
     math — the compile-cache bound (|T buckets| × |kv buckets|) is
     unchanged because the table is a traced operand of static shape.
+
+    ``k_scale``/``v_scale`` (optional, (N_slots, S, KV) f32, DESIGN.md §15):
+    int8 caches — k/v tiles dequantize in-register (``row * scale``) after
+    the int8 HBM read; the scale tiles ride the same index maps.
     """
     t, h, d = q.shape
     n, s, kvh, _ = k_cache.shape
@@ -114,38 +168,57 @@ def packed_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     if block_tables is not None:
         return _packed_attention_block(q, k_cache, v_cache, token_slot,
                                        lengths, block_tables,
+                                       k_scale=k_scale, v_scale=v_scale,
                                        logit_scale=logit_scale,
                                        kv_bucket=kv_bucket,
                                        interpret=interpret)
     if kv_bucket is not None and kv_bucket < s:
         k_cache = jax.lax.slice_in_dim(k_cache, 0, kv_bucket, axis=1)
         v_cache = jax.lax.slice_in_dim(v_cache, 0, kv_bucket, axis=1)
+        if k_scale is not None:
+            k_scale = jax.lax.slice_in_dim(k_scale, 0, kv_bucket, axis=1)
+            v_scale = jax.lax.slice_in_dim(v_scale, 0, kv_bucket, axis=1)
         s = kv_bucket
     group = h // kvh
     scale = logit_scale if logit_scale is not None else d ** -0.5
 
+    # masked partial last block instead of an O(cache) pad (DESIGN.md §15):
+    # the final tile's DMA tail past ``s`` is uninitialized — scores there
+    # are length-masked and the value rows zero-masked in-kernel
     block_k = min(block_k, max(8, s))
-    s_pad = -(-s // block_k) * block_k
-    if s_pad != s:
-        k_cache = jnp.pad(k_cache, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
-        v_cache = jnp.pad(v_cache, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    nsb = -(-s // block_k)
+    s_valid = s if s % block_k else None
 
     qf = q.reshape(t, kvh, group, d)
-    kf = k_cache.transpose(0, 2, 1, 3)        # (N, KV, S_pad, Dqk)
-    vf = v_cache.transpose(0, 2, 1, 3)        # (N, KV, S_pad, Dv)
+    kf = k_cache.transpose(0, 2, 1, 3)        # (N, KV, S, Dqk)
+    vf = v_cache.transpose(0, 2, 1, 3)        # (N, KV, S, Dv)
 
-    grid = (t, kvh, s_pad // block_k)
+    grid = (t, kvh, nsb)
+    in_specs = [
+        pl.BlockSpec((1, 1, group, d),
+                     lambda ti, kv, sb, slot, ln: (ti, kv, 0, 0)),
+        pl.BlockSpec((1, 1, block_k, d),
+                     lambda ti, kv, sb, slot, ln: (slot[ti], kv, sb, 0)),
+        pl.BlockSpec((1, 1, block_k, dv),
+                     lambda ti, kv, sb, slot, ln: (slot[ti], kv, sb, 0)),
+    ]
+    operands = [qf, kf, vf]
+    kernel = _kernel
+    if k_scale is not None:
+        ksf = k_scale.transpose(0, 2, 1)      # (N, KV, S)
+        vsf = v_scale.transpose(0, 2, 1)
+        in_specs += [
+            pl.BlockSpec((1, 1, block_k),
+                         lambda ti, kv, sb, slot, ln: (slot[ti], kv, sb)),
+            pl.BlockSpec((1, 1, block_k),
+                         lambda ti, kv, sb, slot, ln: (slot[ti], kv, sb)),
+        ]
+        operands += [ksf, vsf]
+        kernel = _kernel_quant
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                # token_slot, lengths
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, group, d),
-                         lambda ti, kv, sb, slot, ln: (ti, kv, 0, 0)),
-            pl.BlockSpec((1, 1, block_k, d),
-                         lambda ti, kv, sb, slot, ln: (slot[ti], kv, sb, 0)),
-            pl.BlockSpec((1, 1, block_k, dv),
-                         lambda ti, kv, sb, slot, ln: (slot[ti], kv, sb, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, group, dv),
                                lambda ti, kv, sb, slot, ln: (ti, kv, 0, 0)),
         scratch_shapes=[
@@ -155,17 +228,18 @@ def packed_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
         ],
     )
     out = pl.pallas_call(
-        functools.partial(_kernel, scale=scale, block_k=block_k),
+        functools.partial(kernel, scale=scale, block_k=block_k,
+                          s_valid=s_valid),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((t, kvh, group, dv), q.dtype),
         interpret=interpret,
-    )(token_slot, lengths, qf, kf, vf)
+    )(token_slot, lengths, *operands)
     return out.reshape(t, h, dv)
 
 
 def _packed_attention_block(q, k_cache, v_cache, token_slot, lengths,
-                            block_tables, *, logit_scale, kv_bucket,
-                            interpret):
+                            block_tables, *, k_scale, v_scale, logit_scale,
+                            kv_bucket, interpret):
     """Block-table gather mode (DESIGN.md §12).  The KV grid dimension
     sweeps *logical* blocks 0..kv_bucket/bs; the index map dereferences the
     flattened table so each step's DMA lands on the request's physical
@@ -189,19 +263,35 @@ def _packed_attention_block(q, k_cache, v_cache, token_slot, lengths,
     bt = block_tables.reshape(-1).astype(jnp.int32)
 
     grid = (t, kvh, sweep // bs)
+    in_specs = [
+        pl.BlockSpec((1, 1, group, d),
+                     lambda ti, kv, sb, bt, slot, ln: (ti, kv, 0, 0)),
+        pl.BlockSpec((1, 1, bs, d),
+                     lambda ti, kv, sb, bt, slot, ln:
+                     (bt[slot[ti] * nb_cols + sb], kv, 0, 0)),
+        pl.BlockSpec((1, 1, bs, dv),
+                     lambda ti, kv, sb, bt, slot, ln:
+                     (bt[slot[ti] * nb_cols + sb], kv, 0, 0)),
+    ]
+    operands = [qf, kf, vf]
+    kernel = _kernel_block
+    if k_scale is not None:
+        ksf = k_scale.reshape(n * nb_cols, bs, kvh).transpose(0, 2, 1)
+        vsf = v_scale.reshape(n * nb_cols, bs, kvh).transpose(0, 2, 1)
+        in_specs += [
+            pl.BlockSpec((1, 1, bs),
+                         lambda ti, kv, sb, bt, slot, ln:
+                         (bt[slot[ti] * nb_cols + sb], kv, 0)),
+            pl.BlockSpec((1, 1, bs),
+                         lambda ti, kv, sb, bt, slot, ln:
+                         (bt[slot[ti] * nb_cols + sb], kv, 0)),
+        ]
+        operands += [ksf, vsf]
+        kernel = _kernel_block_quant
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,                # block_tables, token_slot, lengths
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, group, d),
-                         lambda ti, kv, sb, bt, slot, ln: (ti, kv, 0, 0)),
-            pl.BlockSpec((1, 1, bs, d),
-                         lambda ti, kv, sb, bt, slot, ln:
-                         (bt[slot[ti] * nb_cols + sb], kv, 0, 0)),
-            pl.BlockSpec((1, 1, bs, dv),
-                         lambda ti, kv, sb, bt, slot, ln:
-                         (bt[slot[ti] * nb_cols + sb], kv, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, group, dv),
                                lambda ti, kv, sb, bt, slot, ln: (ti, kv, 0, 0)),
         scratch_shapes=[
@@ -211,9 +301,9 @@ def _packed_attention_block(q, k_cache, v_cache, token_slot, lengths,
         ],
     )
     out = pl.pallas_call(
-        functools.partial(_kernel_block, scale=scale, block_k=bs),
+        functools.partial(kernel, scale=scale, block_k=bs),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((t, kvh, group, dv), q.dtype),
         interpret=interpret,
-    )(bt, token_slot, lengths, qf, kf, vf)
+    )(bt, token_slot, lengths, *operands)
     return out.reshape(t, h, dv)

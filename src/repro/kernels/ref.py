@@ -115,11 +115,33 @@ def _block_gather_view(cache: jax.Array, block_tables: jax.Array,
     return view.reshape((n, nbk * bs) + cache.shape[2:])
 
 
+def _dequant_views(k_cache, v_cache, k_scale, v_scale, block_tables,
+                   kv_bucket):
+    """Apply the bucket / block-table view to the caches (and scale leaves,
+    when quantized), then dequantize to f32 for the dense sweep."""
+    if block_tables is not None:
+        k_cache = _block_gather_view(k_cache, block_tables, kv_bucket)
+        v_cache = _block_gather_view(v_cache, block_tables, kv_bucket)
+        if k_scale is not None:
+            k_scale = _block_gather_view(k_scale, block_tables, kv_bucket)
+            v_scale = _block_gather_view(v_scale, block_tables, kv_bucket)
+    else:
+        k_cache, v_cache = _kv_bucket_view(k_cache, v_cache, kv_bucket)
+        if k_scale is not None:
+            k_scale, v_scale = _kv_bucket_view(k_scale, v_scale, kv_bucket)
+    if k_scale is not None:
+        k_cache = k_cache.astype(jnp.float32) * k_scale[..., None]
+        v_cache = v_cache.astype(jnp.float32) * v_scale[..., None]
+    return k_cache, v_cache
+
+
 def packed_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                          token_slot: jax.Array, lengths: jax.Array, *,
                          logit_scale: Optional[float] = None,
                          kv_bucket: Optional[int] = None,
-                         block_tables: Optional[jax.Array] = None
+                         block_tables: Optional[jax.Array] = None,
+                         k_scale: Optional[jax.Array] = None,
+                         v_scale: Optional[jax.Array] = None
                          ) -> jax.Array:
     """Segment-masked attention for the token-packed dense-batch step
     (DESIGN.md §8): every token of a packed ``(T,)`` stream attends its own
@@ -147,12 +169,14 @@ def packed_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     ``block_tables`` (optional, DESIGN.md §12): block-table mode — the
     caches are physical block storage and each slot's logical rows are
     gathered through its table before the dense sweep.
+
+    ``k_scale``/``v_scale`` (optional, (N_slots, S, KV) f32, DESIGN.md §15):
+    int8 caches — the same views apply to the scale leaves and the dense
+    sweep dequantizes (``row * scale`` in f32) before the einsums; this is
+    the XLA analogue of the Pallas kernel's in-register dequant.
     """
-    if block_tables is not None:
-        k_cache = _block_gather_view(k_cache, block_tables, kv_bucket)
-        v_cache = _block_gather_view(v_cache, block_tables, kv_bucket)
-    else:
-        k_cache, v_cache = _kv_bucket_view(k_cache, v_cache, kv_bucket)
+    k_cache, v_cache = _dequant_views(
+        k_cache, v_cache, k_scale, v_scale, block_tables, kv_bucket)
     t, h, d = q.shape
     n, s, kv, _ = k_cache.shape
     dv = v_cache.shape[-1]
@@ -177,15 +201,15 @@ def packed_attention_fast(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                           token_slot: jax.Array, lengths: jax.Array, *,
                           logit_scale: Optional[float] = None,
                           kv_bucket: Optional[int] = None,
-                          block_tables: Optional[jax.Array] = None
+                          block_tables: Optional[jax.Array] = None,
+                          k_scale: Optional[jax.Array] = None,
+                          v_scale: Optional[jax.Array] = None
                           ) -> jax.Array:
     """No-upcast variant of ``packed_attention_ref`` (§Perf HC3): same
-    math, bf16 einsum operands with f32 in-register accumulation."""
-    if block_tables is not None:
-        k_cache = _block_gather_view(k_cache, block_tables, kv_bucket)
-        v_cache = _block_gather_view(v_cache, block_tables, kv_bucket)
-    else:
-        k_cache, v_cache = _kv_bucket_view(k_cache, v_cache, kv_bucket)
+    math, bf16 einsum operands with f32 in-register accumulation (int8
+    caches dequantize to f32 first — the scale multiply *is* the upcast)."""
+    k_cache, v_cache = _dequant_views(
+        k_cache, v_cache, k_scale, v_scale, block_tables, kv_bucket)
     t, h, d = q.shape
     n, s, kv, _ = k_cache.shape
     dv = v_cache.shape[-1]

@@ -207,6 +207,14 @@ def main() -> None:
                   f"({rate:.0%} acceptance, "
                   f"{st['spec_accepted_per_verify']:.2f} committed "
                   f"tokens/verify)")
+    if eng.kv_dtype == "int8":
+        drift = st["kv_quant_drift"]
+        print(f"kv dtype int8: {st['kv_quant_bytes_saved']/1e6:.2f} MB of "
+              f"cache writes saved vs {eng.cfg.dtype} storage "
+              f"({eng.kv.bytes_per_token} B/token vs "
+              f"{eng._kv_bytes_native} B/token)"
+              + (f", max logit drift {drift:.4f}" if drift is not None
+                 else ""))
     if eng.prefix_caching:
         total_prompt = sum(r.prompt_len for r in done)
         print(f"prefix caching: {kv['prefix_hit_tokens']} prompt tokens "

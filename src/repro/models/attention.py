@@ -30,6 +30,7 @@ from repro.distributed import tp
 from repro.kernels import ops
 from repro.models.layers import apply_rope, apply_rope_nohead, rmsnorm, shard
 from repro.models.param import ParamDef
+from repro.serving import kvquant
 
 
 @dataclasses.dataclass(frozen=True)
@@ -227,24 +228,52 @@ def gqa_packed(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
     the same leaves are treated as physical block storage — K/V scatter at
     flat row ``token_dst[t]`` and attention gathers through the per-slot
     table, so requests can share immutable prefix blocks.  TP-safe: both
-    reshapes fold the unsharded (slot, seq) axes only."""
+    reshapes fold the unsharded (slot, seq) axes only.
+
+    int8 KV (DESIGN.md §15, scale leaves ``k_s``/``v_s`` present): each
+    token's post-rope K/V row quantizes *in-program* at scatter time
+    (symmetric per-(token, kv-head), f32 scale rides the same scatter), and
+    attention dequantizes in-register after the int8 HBM read — the kernel
+    receives the int8 leaves plus the scale tiles, never a dense f32 copy."""
     q, k_new, v_new = _qkv(cfg, p, x, positions)
+    quantized = "k_s" in cache
+    if quantized:
+        k_val, k_s_new = kvquant.quantize_kv(k_new[0])
+        v_val, v_s_new = kvquant.quantize_kv(v_new[0])
+    else:
+        k_val, v_val = k_new[0], v_new[0]
+        k_scale = v_scale = None
     if block_tables is not None:
-        k_cache = _flat_scatter(cache["k"], k_new[0], token_dst)
-        v_cache = _flat_scatter(cache["v"], v_new[0], token_dst)
+        k_cache = _flat_scatter(cache["k"], k_val, token_dst)
+        v_cache = _flat_scatter(cache["v"], v_val, token_dst)
+        if quantized:
+            k_scale = _flat_scatter(cache["k_s"], k_s_new, token_dst)
+            v_scale = _flat_scatter(cache["v_s"], v_s_new, token_dst)
     else:
         k_cache = cache["k"].at[token_slot, token_wpos].set(
-            k_new[0].astype(cache["k"].dtype), mode="drop")
+            k_val.astype(cache["k"].dtype), mode="drop")
         v_cache = cache["v"].at[token_slot, token_wpos].set(
-            v_new[0].astype(cache["v"].dtype), mode="drop")
+            v_val.astype(cache["v"].dtype), mode="drop")
+        if quantized:
+            k_scale = cache["k_s"].at[token_slot, token_wpos].set(
+                k_s_new, mode="drop")
+            v_scale = cache["v_s"].at[token_slot, token_wpos].set(
+                v_s_new, mode="drop")
     k_cache = shard(k_cache, "batch", "kv_seq", "act_kv_heads", None)
     v_cache = shard(v_cache, "batch", "kv_seq", "act_kv_heads", None)
+    if quantized:
+        k_scale = shard(k_scale, "batch", "kv_seq", "act_kv_heads")
+        v_scale = shard(v_scale, "batch", "kv_seq", "act_kv_heads")
     out = ops.packed_attention(q[0], k_cache, v_cache, token_slot,
                                positions[0] + 1, kv_bucket=kv_bucket,
-                               block_tables=block_tables)
+                               block_tables=block_tables,
+                               k_scale=k_scale, v_scale=v_scale)
     y = tp.out_project(out, p["wo"])[None]
     y = shard(y, "batch", "act_seq", "embed")
-    return y, {"k": k_cache, "v": v_cache}
+    new_cache = {"k": k_cache, "v": v_cache}
+    if quantized:
+        new_cache["k_s"], new_cache["v_s"] = k_scale, v_scale
+    return y, new_cache
 
 
 def _write_at(cache: jax.Array, new: jax.Array, idx: jax.Array) -> jax.Array:
@@ -263,17 +292,30 @@ def _write_seq_at(cache: jax.Array, new: jax.Array, idx: jax.Array) -> jax.Array
     return jax.vmap(one)(cache, new, idx)
 
 
-def gqa_init_cache(cfg: ModelConfig, tp: int, batch: int, max_len: int) -> dict:
+def gqa_init_cache(cfg: ModelConfig, tp: int, batch: int, max_len: int,
+                   kv_dtype: Optional[str] = None) -> dict:
     hl = head_layout(cfg.n_heads, cfg.n_kv_heads, tp)
     hd = cfg.resolved_head_dim
     shape = (batch, max_len, hl.kv_eff, hd)
+    if kv_dtype == "int8":
+        # int8 value leaves + f32 per-(token, kv-head) scale leaves
+        # (DESIGN.md §15) — same (batch, seq, kv-head) leading layout, so
+        # CoW / block-table / TP paths treat them like any other leaf
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_s": jnp.zeros(shape[:-1], jnp.float32),
+                "v_s": jnp.zeros(shape[:-1], jnp.float32)}
     return {"k": jnp.zeros(shape, jnp.dtype(cfg.dtype)),
             "v": jnp.zeros(shape, jnp.dtype(cfg.dtype))}
 
 
-def gqa_cache_axes() -> dict:
-    return {"k": ("batch", "kv_seq", "act_kv_heads", None),
+def gqa_cache_axes(kv_dtype: Optional[str] = None) -> dict:
+    axes = {"k": ("batch", "kv_seq", "act_kv_heads", None),
             "v": ("batch", "kv_seq", "act_kv_heads", None)}
+    if kv_dtype == "int8":
+        axes["k_s"] = ("batch", "kv_seq", "act_kv_heads")
+        axes["v_s"] = ("batch", "kv_seq", "act_kv_heads")
+    return axes
 
 
 # ---------------------------------------------------------------------------
@@ -439,26 +481,57 @@ def mla_packed(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
     physical rows and the bucket view is a per-slot *gather* through the
     block table instead of a slice — the absorbed concat then proceeds on
     the logical view, so the dense latent attention (one shared kv "head")
-    needs no kernel-side table."""
+    needs no kernel-side table.
+
+    int8 KV (DESIGN.md §15, ``c_kv_s``/``k_rope_s`` present): only the
+    latent/rope leaves quantize (the cache stores nothing else) —
+    per-(token,) symmetric scales scatter alongside, and the bucketed
+    *views* dequantize right before the absorbed concat, so the int8 HBM
+    read feeds the same flash kernel unchanged."""
     m = cfg.mla
     q_abs = _mla_q_absorbed(cfg, p, x, positions)        # (1,T,H,rank+rope)
     c_new, r_new = _mla_latent(cfg, p, x, positions)
+    quantized = "c_kv_s" in cache
+    if quantized:
+        c_val, c_s_new = kvquant.quantize_kv(c_new[0])
+        r_val, r_s_new = kvquant.quantize_kv(r_new[0])
+    else:
+        c_val, r_val = c_new[0], r_new[0]
+        c_scale = r_scale = None
     if block_tables is not None:
-        ckv = _flat_scatter(cache["c_kv"], c_new[0], token_dst)
-        krp = _flat_scatter(cache["k_rope"], r_new[0], token_dst)
+        ckv = _flat_scatter(cache["c_kv"], c_val, token_dst)
+        krp = _flat_scatter(cache["k_rope"], r_val, token_dst)
+        if quantized:
+            c_scale = _flat_scatter(cache["c_kv_s"], c_s_new, token_dst)
+            r_scale = _flat_scatter(cache["k_rope_s"], r_s_new, token_dst)
         ckv = shard(ckv, "batch", "kv_seq", None)
         ckv_v = _block_view(ckv, block_tables, kv_bucket)
         krp_v = _block_view(krp, block_tables, kv_bucket)
+        if quantized:
+            c_s_v = _block_view(c_scale, block_tables, kv_bucket)
+            r_s_v = _block_view(r_scale, block_tables, kv_bucket)
     else:
         ckv = cache["c_kv"].at[token_slot, token_wpos].set(
-            c_new[0].astype(cache["c_kv"].dtype), mode="drop")
+            c_val.astype(cache["c_kv"].dtype), mode="drop")
         krp = cache["k_rope"].at[token_slot, token_wpos].set(
-            r_new[0].astype(cache["k_rope"].dtype), mode="drop")
+            r_val.astype(cache["k_rope"].dtype), mode="drop")
+        if quantized:
+            c_scale = cache["c_kv_s"].at[token_slot, token_wpos].set(
+                c_s_new, mode="drop")
+            r_scale = cache["k_rope_s"].at[token_slot, token_wpos].set(
+                r_s_new, mode="drop")
         ckv = shard(ckv, "batch", "kv_seq", None)
         ckv_v, krp_v = ckv, krp
+        c_s_v, r_s_v = c_scale, r_scale
         if kv_bucket is not None and kv_bucket < ckv.shape[1]:
             ckv_v = jax.lax.slice_in_dim(ckv, 0, kv_bucket, axis=1)
             krp_v = jax.lax.slice_in_dim(krp, 0, kv_bucket, axis=1)
+            if quantized:
+                c_s_v = jax.lax.slice_in_dim(c_scale, 0, kv_bucket, axis=1)
+                r_s_v = jax.lax.slice_in_dim(r_scale, 0, kv_bucket, axis=1)
+    if quantized:
+        ckv_v = kvquant.dequantize_kv(ckv_v, c_s_v, x.dtype)
+        krp_v = kvquant.dequantize_kv(krp_v, r_s_v, x.dtype)
     k_abs = jnp.concatenate([ckv_v, krp_v], axis=-1)[:, :, None, :]
     v_lat = ckv_v[:, :, None, :]
     scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
@@ -468,16 +541,29 @@ def mla_packed(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
     out = shard(out[None], "batch", "act_seq", "act_heads", None)[0]
     y = tp.out_project(out, p["wo"])[None]
     y = shard(y, "batch", "act_seq", "embed")
-    return y, {"c_kv": ckv, "k_rope": krp}
+    new_cache = {"c_kv": ckv, "k_rope": krp}
+    if quantized:
+        new_cache["c_kv_s"], new_cache["k_rope_s"] = c_scale, r_scale
+    return y, new_cache
 
 
-def mla_init_cache(cfg: ModelConfig, tp: int, batch: int, max_len: int) -> dict:
+def mla_init_cache(cfg: ModelConfig, tp: int, batch: int, max_len: int,
+                   kv_dtype: Optional[str] = None) -> dict:
     m = cfg.mla
+    if kv_dtype == "int8":
+        return {"c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), jnp.int8),
+                "k_rope": jnp.zeros((batch, max_len, m.qk_rope_dim), jnp.int8),
+                "c_kv_s": jnp.zeros((batch, max_len), jnp.float32),
+                "k_rope_s": jnp.zeros((batch, max_len), jnp.float32)}
     dt = jnp.dtype(cfg.dtype)
     return {"c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dt),
             "k_rope": jnp.zeros((batch, max_len, m.qk_rope_dim), dt)}
 
 
-def mla_cache_axes() -> dict:
-    return {"c_kv": ("batch", "kv_seq", None),
+def mla_cache_axes(kv_dtype: Optional[str] = None) -> dict:
+    axes = {"c_kv": ("batch", "kv_seq", None),
             "k_rope": ("batch", "kv_seq", None)}
+    if kv_dtype == "int8":
+        axes["c_kv_s"] = ("batch", "kv_seq")
+        axes["k_rope_s"] = ("batch", "kv_seq")
+    return axes

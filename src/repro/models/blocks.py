@@ -178,10 +178,11 @@ def block_packed(cfg: ModelConfig, spec: LayerSpec, p: dict, x: jax.Array,
 
 
 def block_init_cache(cfg: ModelConfig, spec: LayerSpec, tp: int, batch: int,
-                     max_len: int) -> dict:
+                     max_len: int, kv_dtype: str | None = None) -> dict:
     if spec.mixer == ATTN:
-        return (attn.mla_init_cache(cfg, tp, batch, max_len) if cfg.mla is not None
-                else attn.gqa_init_cache(cfg, tp, batch, max_len))
+        return (attn.mla_init_cache(cfg, tp, batch, max_len, kv_dtype)
+                if cfg.mla is not None
+                else attn.gqa_init_cache(cfg, tp, batch, max_len, kv_dtype))
     if spec.mixer == MAMBA:
         return ssm_mod.mamba_init_cache(cfg, tp, batch)
     if spec.mixer == MLSTM:
@@ -191,10 +192,11 @@ def block_init_cache(cfg: ModelConfig, spec: LayerSpec, tp: int, batch: int,
     raise ValueError(spec.mixer)
 
 
-def block_cache_axes(cfg: ModelConfig, spec: LayerSpec) -> dict:
+def block_cache_axes(cfg: ModelConfig, spec: LayerSpec,
+                     kv_dtype: str | None = None) -> dict:
     if spec.mixer == ATTN:
-        return (attn.mla_cache_axes() if cfg.mla is not None
-                else attn.gqa_cache_axes())
+        return (attn.mla_cache_axes(kv_dtype) if cfg.mla is not None
+                else attn.gqa_cache_axes(kv_dtype))
     if spec.mixer == MAMBA:
         return ssm_mod.mamba_cache_axes()
     if spec.mixer == MLSTM:

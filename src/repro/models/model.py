@@ -218,12 +218,14 @@ def loss_fn(cfg: ModelConfig, params: dict, batch: dict, *,
 # ---------------------------------------------------------------------------
 # cache: per-group stacked block caches
 # ---------------------------------------------------------------------------
-def init_cache(cfg: ModelConfig, tp: int, batch: int, max_len: int) -> list:
+def init_cache(cfg: ModelConfig, tp: int, batch: int, max_len: int,
+               kv_dtype: str | None = None) -> list:
     out = []
     for pattern, reps in cfg.layer_groups():
         group = {}
         for i, spec in enumerate(pattern):
-            one = blocks.block_init_cache(cfg, spec, tp, batch, max_len)
+            one = blocks.block_init_cache(cfg, spec, tp, batch, max_len,
+                                          kv_dtype)
             group[f"sub{i}"] = jax.tree.map(
                 lambda a: jnp.tile(a[None], (reps,) + (1,) * a.ndim), one)
         out.append(group)
@@ -248,11 +250,11 @@ def cache_shapes(cfg: ModelConfig, tp: int, batch: int, max_len: int,
                         is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
 
 
-def cache_axes(cfg: ModelConfig) -> list:
+def cache_axes(cfg: ModelConfig, kv_dtype: str | None = None) -> list:
     """Logical axes per cache leaf (without the leading layer-stack dim)."""
     out = []
     for pattern, reps in cfg.layer_groups():
-        group = {f"sub{i}": blocks.block_cache_axes(cfg, spec)
+        group = {f"sub{i}": blocks.block_cache_axes(cfg, spec, kv_dtype)
                  for i, spec in enumerate(pattern)}
         out.append(group)
     return out

@@ -63,6 +63,11 @@ class EngineConfig:
     kv_bucketing: bool = True
     # ---- cross-request prefix caching (DESIGN.md §12) -----------------------
     prefix_caching: bool = False
+    # ---- KV storage dtype (DESIGN.md §15) -----------------------------------
+    # "bf16" = the model's native dtype (pre-§15 behavior); "int8" stores
+    # int8 value leaves + per-(token, kv-head) f32 scale leaves and the
+    # packed step quantizes at scatter / dequantizes in-register on load
+    kv_dtype: str = "bf16"
     # ---- speculative decoding (DESIGN.md §13) -------------------------------
     # draft tokens verified per decoding slot per iteration; 0 disables
     # (each decode segment is then the plain single token of §8/§10)
@@ -98,6 +103,11 @@ class EngineConfig:
                 "prefix caching (DESIGN.md §12) requires the packed step"
             assert self.max_len % self.kv_block_size == 0, \
                 (self.max_len, self.kv_block_size)
+        assert self.kv_dtype in ("bf16", "int8"), self.kv_dtype
+        if self.kv_dtype == "int8":
+            assert step == "packed", \
+                "int8 KV (DESIGN.md §15) requires the packed step — the " \
+                "legacy decode/chunk paths write native-dtype rows"
         assert self.spec_k >= 0, self.spec_k
         if self.spec_k > 0:
             assert step == "packed", \
@@ -204,6 +214,13 @@ class EngineConfig:
         ap.add_argument("--kv-block-size", type=int, default=cls.kv_block_size,
                         help="KV block size (tokens per block-table block; "
                              "must divide --max-len when --prefix-caching)")
+        ap.add_argument("--kv-dtype", default=cls.kv_dtype,
+                        choices=["bf16", "int8"],
+                        help="KV-cache storage dtype (DESIGN.md §15): int8 "
+                             "stores quantized values + per-(token, kv-head) "
+                             "f32 scales — ~2x the admitted requests at a "
+                             "fixed --kv-budget, dequant-on-load in the "
+                             "packed-attention kernel")
         ap.add_argument("--spec-k", type=int, default=cls.spec_k,
                         help="speculative decoding (DESIGN.md §13): draft "
                              "tokens verified per decoding slot per packed "
@@ -239,6 +256,7 @@ class EngineConfig:
             kv_bucketing=not ns.no_kv_bucketing,
             prefix_caching=ns.prefix_caching,
             kv_block_size=ns.kv_block_size,
+            kv_dtype=ns.kv_dtype,
             spec_k=ns.spec_k,
             drafter=ns.drafter,
             temperature=ns.temperature,

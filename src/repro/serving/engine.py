@@ -95,7 +95,8 @@ from repro.serving.request import Request, State
 from repro.serving.scheduler import BatchPlan, GlobalBatchScheduler
 
 
-def kv_bytes_per_token(cfg: ModelConfig) -> int:
+def kv_bytes_per_token(cfg: ModelConfig,
+                       kv_dtype: Optional[str] = None) -> int:
     """Per-token KV-cache bytes, derived from the *actual* attention cache
     leaves (``jax.eval_shape`` — no allocation): for each attention layer,
     the bytes of one sequence row of every leaf.  GQA: ``2·kv·hd·itemsize``
@@ -104,7 +105,11 @@ def kv_bytes_per_token(cfg: ModelConfig) -> int:
     deepseek-style admission ~an order of magnitude too conservative);
     attention-free SSM/xLSTM models carry O(1) recurrent state and no
     per-token pages at all, so this is 0 for them (the old
-    ``max(n_attn, 1)`` floor charged them per-token paging)."""
+    ``max(n_attn, 1)`` floor charged them per-token paging).
+
+    ``kv_dtype="int8"`` (DESIGN.md §15) rates the quantized layout — int8
+    value leaves plus the f32 scale leaves — so a fixed ``kv_budget_bytes``
+    admits ~2× the tokens of the native-dtype cache."""
     per_spec: dict = {}
     total = 0
     for spec in cfg.layer_specs():
@@ -112,7 +117,8 @@ def kv_bytes_per_token(cfg: ModelConfig) -> int:
             continue
         if spec not in per_spec:
             leaves = jax.eval_shape(
-                lambda s=spec: blocks.block_init_cache(cfg, s, 1, 1, 2))
+                lambda s=spec: blocks.block_init_cache(cfg, s, 1, 1, 2,
+                                                       kv_dtype))
             per_spec[spec] = sum(
                 int(np.prod(leaf.shape[2:])) * leaf.dtype.itemsize
                 for leaf in jax.tree.leaves(leaves))
@@ -169,6 +175,13 @@ class EngineStats:
     # re-prefill work another replica will absorb
     evacuated_requests: int = 0
     evacuated_tokens: int = 0
+    # int8 KV quantization (DESIGN.md §15): cache bytes saved vs the
+    # native-dtype layout for every token row written (counted at launch —
+    # tokens × (native rate − quantized rate)), and the most recent measured
+    # logit-drift sample (filled by benchmarks/tests that run the bf16 A/B;
+    # the engine itself never pays for a second forward)
+    kv_quant_bytes_saved: int = 0
+    kv_quant_drift: Optional[float] = None
 
     @property
     def total_tokens(self) -> int:
@@ -270,6 +283,7 @@ class ServeEngine:
         "attn_stream": "attn_stream", "seed": "seed",
         "spec_k": "spec_k", "drafter": "drafter",
         "temperature": "temperature", "top_k": "top_k",
+        "kv_dtype": "kv_dtype",
     }
 
     def __init__(self, cfg: ModelConfig, params,
@@ -331,11 +345,21 @@ class ServeEngine:
         # kept for A/B)
         self.kv_buckets = config.resolved_kv_buckets()
 
+        # KV storage dtype (DESIGN.md §15): "bf16" keeps the model's native
+        # dtype; "int8" swaps the attention cache leaves for int8 values +
+        # f32 per-(token, kv-head) scales — quantize-at-scatter in the
+        # packed program, dequant-on-load in the attention kernel
+        self.kv_dtype = config.kv_dtype
+        self._cache_kv_dtype = "int8" if self.kv_dtype == "int8" else None
         # per-token KV bytes from the actual cache leaves — NOT the GQA
         # formula: MLA caches only the latent (c_kv + k_rope) and
         # attention-free recurrent models cache nothing per token
         page_size = config.kv_block_size
-        kv_bytes = kv_bytes_per_token(cfg)
+        kv_bytes = kv_bytes_per_token(cfg, self._cache_kv_dtype)
+        # native-dtype rate, kept for the bytes-saved counter (== kv_bytes
+        # when not quantizing, so the saving reads 0)
+        self._kv_bytes_native = kv_bytes if self._cache_kv_dtype is None \
+            else kv_bytes_per_token(cfg)
         if config.total_pages is not None:
             pages = config.total_pages
         elif config.kv_budget_bytes is not None and kv_bytes > 0:
@@ -389,7 +413,8 @@ class ServeEngine:
             drafter=self.drafter)
 
         # slot caches: model cache trees with leading batch = max_slots
-        self.cache = model_lib.init_cache(cfg, 1, self.max_slots, self.max_len)
+        self.cache = model_lib.init_cache(cfg, 1, self.max_slots,
+                                          self.max_len, self._cache_kv_dtype)
         self.cache_len = jnp.zeros((self.max_slots,), jnp.int32)
         # device-resident sampled-token feedback (DESIGN.md §10), generalized
         # to the per-slot token ring (§13): row = the W = spec_k+1 samples of
@@ -415,7 +440,8 @@ class ServeEngine:
 
         # fresh one-slot cache, scattered into a slot on (re)assignment so a
         # reused slot never leaks the previous request's recurrent state
-        self._slot_init = model_lib.init_cache(cfg, 1, 1, self.max_len)
+        self._slot_init = model_lib.init_cache(cfg, 1, 1, self.max_len,
+                                               self._cache_kv_dtype)
 
         # tensor parallelism (DESIGN.md §11): 1-D ("model",) mesh, params
         # and slot caches placed with the manual shard_map layout (fused
@@ -433,9 +459,11 @@ class ServeEngine:
             tp_lib.validate_tp(cfg, self.tp)
             self._mesh = make_tp_mesh(self.tp)
             self.params = tp_lib.shard_params_tp(cfg, self.params, self._mesh)
-            self.cache = tp_lib.shard_cache_tp(cfg, self.cache, self._mesh)
+            self.cache = tp_lib.shard_cache_tp(cfg, self.cache, self._mesh,
+                                               self._cache_kv_dtype)
             self._slot_init = tp_lib.shard_cache_tp(cfg, self._slot_init,
-                                                    self._mesh)
+                                                    self._mesh,
+                                                    self._cache_kv_dtype)
             rep = NamedSharding(self._mesh, P())
             self.cache_len = jax.device_put(self.cache_len, rep)
             self.last_token = jax.device_put(self.last_token, rep)
@@ -653,7 +681,7 @@ class ServeEngine:
         ``_cache_size`` for the compile-cache-bound assertions)."""
         mesh = self._mesh
         param_specs = tp_lib.param_pspecs_tp(self.cfg)
-        cache_specs = tp_lib.cache_pspecs_tp(self.cfg)
+        cache_specs = tp_lib.cache_pspecs_tp(self.cfg, self._cache_kv_dtype)
         rep = P()
         # token_dst / block_tables / verify_idx ride as replicated
         # operands: the cache leaves shard on head/channel axes only, so
@@ -1070,6 +1098,12 @@ class ServeEngine:
         self.stats.prefill_tokens += packed.tokens - n_decode * W
         self.stats.prefill_model_tokens += packed.tokens - n_decode * W
         self.stats.packed_pad_tokens += packed.padding
+        if self._cache_kv_dtype is not None:
+            # cache bytes this launch did NOT write vs the native-dtype
+            # layout: every real token scatters one quantized row per
+            # attention layer (DESIGN.md §15)
+            self.stats.kv_quant_bytes_saved += packed.tokens * \
+                (self._kv_bytes_native - self.kv.bytes_per_token)
         if self.prefix_caching:
             dst_op = jnp.asarray(token_dst.astype(np.int32))
             tbl_op = jnp.asarray(tables_arr)

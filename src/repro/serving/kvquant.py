@@ -1,16 +1,22 @@
-"""int8 KV-cache quantization (beyond-paper; QServe-style per-token scales).
+"""int8 KV-cache quantization primitives (DESIGN.md §15).
 
-Halves KV-cache HBM footprint and stream traffic — the decode-attention
-memory term (the paper's GEMV bottleneck) drops ~2× on hardware; the paged
-decode kernel dequantizes in-register after the int8 HBM read.
+Symmetric int8 per (token, kv-head) row: one f32 scale per (..., D) row
+(0.8% overhead at head_dim 128).  Per-element error is bounded by
+``max|row| / 254``; end-to-end logit drift is gated per mixer family in
+tests/test_kvquant.py and tests/test_kv_int8_engine.py.
 
-Scheme: symmetric int8 per (token, kv-head) — one f32 scale per (B, S, KV)
-row (0.8% overhead at head_dim 128).  Error is bounded by scale/2 per
-element; end-to-end logit error is validated in tests/test_kvquant.py.
+These two functions are the *only* quant primitive in the repo: the packed
+step quantizes K/V at scatter time (models/attention.py) and the
+packed-attention kernel dequantizes in-register after the int8 HBM read
+(kernels/packed_attention.py); the ref oracle dequantizes densely
+(kernels/ref.py).  The cache storage dtype is selected by
+``EngineConfig(kv_dtype="int8")`` — the int8 value leaves and f32 scale
+leaves live in the same per-mixer cache dict (``k``/``v`` + ``k_s``/``v_s``
+for GQA, ``c_kv``/``k_rope`` + ``_s`` for absorbed MLA), sharing the
+``(layers, slots, max_len, ...)`` physical layout so §11 TP sharding and
+§12 block tables / CoW / prefix hashing are untouched.
 """
 from __future__ import annotations
-
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,48 +33,3 @@ def quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
 def dequantize_kv(q: jax.Array, scale: jax.Array,
                   dtype=jnp.bfloat16) -> jax.Array:
     return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
-
-
-def init_quant_cache(batch: int, max_len: int, kv_heads: int,
-                     head_dim: int) -> dict:
-    return {
-        "k_q": jnp.zeros((batch, max_len, kv_heads, head_dim), jnp.int8),
-        "v_q": jnp.zeros((batch, max_len, kv_heads, head_dim), jnp.int8),
-        "k_s": jnp.zeros((batch, max_len, kv_heads), jnp.float32),
-        "v_s": jnp.zeros((batch, max_len, kv_heads), jnp.float32),
-    }
-
-
-def write_token(cache: dict, k_new: jax.Array, v_new: jax.Array,
-                idx: jax.Array) -> dict:
-    """k_new/v_new: (B, KV, D) bf16; idx: (B,) write positions."""
-    kq, ks = quantize_kv(k_new)
-    vq, vs = quantize_kv(v_new)
-
-    def w(buf, val):
-        def one(c, n, i):
-            return jax.lax.dynamic_update_slice(
-                c, n[None].astype(c.dtype), (i,) + (0,) * (c.ndim - 1))
-        return jax.vmap(one)(buf, val, idx)
-
-    return {"k_q": w(cache["k_q"], kq), "v_q": w(cache["v_q"], vq),
-            "k_s": w(cache["k_s"], ks), "v_s": w(cache["v_s"], vs)}
-
-
-def quant_decode_attention(q: jax.Array, cache: dict, cache_len: jax.Array,
-                           *, logit_scale: Optional[float] = None,
-                           dtype=jnp.bfloat16) -> jax.Array:
-    """Decode attention over the int8 cache.  On TPU the dequant fuses into
-    the kernel's VMEM load; this XLA form keeps the same math."""
-    from repro.kernels.ref import decode_attention_ref
-    k = dequantize_kv(cache["k_q"], cache["k_s"], dtype)
-    v = dequantize_kv(cache["v_q"], cache["v_s"], dtype)
-    return decode_attention_ref(q, k, v, cache_len, logit_scale=logit_scale)
-
-
-def cache_bytes(batch: int, max_len: int, kv_heads: int, head_dim: int,
-                quantized: bool) -> int:
-    per_tok = kv_heads * head_dim
-    if quantized:
-        return batch * max_len * (2 * per_tok * 1 + 2 * kv_heads * 4)
-    return batch * max_len * 2 * per_tok * 2      # bf16 k+v

@@ -117,3 +117,39 @@ class TestProperties:
         for node in nano.pipeline.nodes.values():
             per_kind[node.kind] = per_kind.get(node.kind, 0.0) + node.work
         assert nano.iter_time >= max(per_kind.values()) * 0.999
+
+
+class TestKVDtype:
+    """Dtype-aware KV byte terms (DESIGN.md §15)."""
+
+    def test_int8_doubles_kv_capacity(self):
+        cfg = get_config("llama2-70b")            # head_dim 128, GQA
+        ms_bf = cm.model_stats(cfg)
+        ms_i8 = cm.model_stats(cfg, "int8")
+        assert ms_i8.kv_per_token == ms_bf.kv_per_token
+        # 1 B/elem + f32 scale per (row, kv-head): 1 + 4/128 vs 2 bytes
+        assert ms_i8.kv_bytes_per_elem < 0.52 * ms_bf.kv_bytes_per_elem
+        e_bf = cm.e_kv(cm.A100_80G, ms_bf, 8)
+        e_i8 = cm.e_kv(cm.A100_80G, ms_i8, 8)
+        assert e_i8 >= 1.9 * e_bf                 # ~2x resident elements
+        # bigger resident batch at the same byte budget
+        w = cm.Workload(512, 1024)
+        assert cm.b_req(cm.A100_80G, ms_i8, w, 8) >= \
+            1.9 * cm.b_req(cm.A100_80G, ms_bf, w, 8)
+
+    def test_decode_attention_bytes_track_storage_rate(self):
+        cfg = get_config("llama2-70b")
+        w = cm.Workload(512, 1024)
+        row = lambda rows, name: next(r for r in rows if r["op"] == name)
+        # pin bdense: without it the int8 run's bigger b_req inflates every
+        # dense term too, which is real but not what this test isolates
+        t_bf = cm.table2(cfg, w, cm.A100_80G, 8, bdense=2048)
+        t_i8 = cm.table2(cfg, w, cm.A100_80G, 8, bdense=2048,
+                         kv_dtype="int8")
+        bf = row(t_bf, "DecodeAttention")["mem_gb"]
+        i8 = row(t_i8, "DecodeAttention")["mem_gb"]
+        # ~2x the elements at ~half the bytes each: byte term ~unchanged
+        assert bf * 0.9 <= i8 <= bf * 1.1
+        # dense GEMM terms don't see the cache dtype
+        assert row(t_bf, "GEMM-O")["mem_gb"] == \
+            pytest.approx(row(t_i8, "GEMM-O")["mem_gb"])

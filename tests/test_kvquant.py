@@ -1,12 +1,17 @@
-"""int8 KV-cache quantization: round-trip error bounds + attention accuracy
-+ footprint accounting."""
+"""int8 KV-cache quantization primitives (DESIGN.md §15): round-trip error
+bounds, attention accuracy through the integrated packed path, and footprint
+accounting via the engine's eval_shape-derived per-token byte rate."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 from _hyp import given, settings, st  # optional-hypothesis shim
 
-from repro.kernels.ref import decode_attention_ref
+from repro.configs import get_config
+from repro.kernels import ops
 from repro.serving import kvquant
+from repro.serving.engine import kv_bytes_per_token
 
 RNG = np.random.default_rng(21)
 
@@ -24,25 +29,51 @@ def test_quant_roundtrip_error_bound(scale, seed):
 
 
 def test_quant_attention_close_to_fp():
-    b, s, h, kv, d = 2, 64, 8, 2, 32
-    q = jnp.asarray(RNG.normal(size=(b, h, d)), jnp.bfloat16)
-    k = jnp.asarray(RNG.normal(size=(b, s, kv, d)), jnp.bfloat16)
-    v = jnp.asarray(RNG.normal(size=(b, s, kv, d)), jnp.bfloat16)
-    clen = jnp.full((b,), s, jnp.int32)
+    """Quantize a K/V cache with the integrated primitive and attend through
+    the packed-attention ref (the serving path): logits stay within 5%."""
+    n, s, h, kv, d = 4, 64, 8, 2, 32
+    t = n                                          # one decode token per slot
+    q = jnp.asarray(RNG.normal(size=(t, h, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(n, s, kv, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(n, s, kv, d)), jnp.float32)
+    token_slot = jnp.arange(t, dtype=jnp.int32)
+    lengths = jnp.full((t,), s, jnp.int32)
 
-    cache = kvquant.init_quant_cache(b, s, kv, d)
-    for t in range(s):
-        cache = kvquant.write_token(cache, k[:, t], v[:, t],
-                                    jnp.full((b,), t, jnp.int32))
-    out_q = kvquant.quant_decode_attention(q, cache, clen)
-    out_f = decode_attention_ref(q, k, v, clen)
+    kq, ks = kvquant.quantize_kv(k)
+    vq, vs = kvquant.quantize_kv(v)
+    out_q = ops.packed_attention(q, kq, vq, token_slot, lengths,
+                                 k_scale=ks, v_scale=vs, impl="ref")
+    out_f = ops.packed_attention(q, k, v, token_slot, lengths, impl="ref")
     err = float(jnp.abs(out_q.astype(jnp.float32)
                         - out_f.astype(jnp.float32)).max())
     scale = float(jnp.abs(out_f.astype(jnp.float32)).max()) + 1e-9
     assert err < 0.05 * scale, (err, scale)   # int8 KV keeps logits within 5%
 
 
-def test_footprint_halves():
-    full = kvquant.cache_bytes(128, 32768, 8, 128, quantized=False)
-    quant = kvquant.cache_bytes(128, 32768, 8, 128, quantized=True)
-    assert quant < 0.52 * full                # ~2x minus scale overhead
+def test_footprint_nearly_halves():
+    """eval_shape-derived per-token rate: int8 storage (values + f32 scales)
+    costs ~half the native bf16 layout, i.e. ~2x requests fit at a fixed
+    kv_budget_bytes (DESIGN.md §15).  Scale overhead is 4/head_dim per
+    element, so head_dim=128 (production shape) lands under 0.52x while
+    tiny-toy's head_dim=64 sits at 0.532x."""
+    cfg = get_config("tiny-toy")                   # bf16-native config
+    assert cfg.dtype == "bfloat16"
+    full = kv_bytes_per_token(cfg)
+    quant = kv_bytes_per_token(cfg, "int8")
+    assert quant < 0.54 * full, (quant, full)      # ~2x minus scale overhead
+
+    wide = dataclasses.replace(cfg, head_dim=128)
+    full, quant = kv_bytes_per_token(wide), kv_bytes_per_token(wide, "int8")
+    assert quant < 0.52 * full, (quant, full)
+    assert full / quant >= 1.9                     # >=1.9x admitted tokens
+
+
+def test_footprint_mla_family():
+    """Absorbed MLA: only the latent + rope leaves store per token, and only
+    those quantize; the int8 rate still lands near half of native."""
+    from repro.configs import scale_down
+    cfg = scale_down(get_config("deepseek-v2-236b"))
+    assert cfg.mla is not None
+    full = kv_bytes_per_token(cfg)
+    quant = kv_bytes_per_token(cfg, "int8")
+    assert quant < 0.62 * full, (quant, full)

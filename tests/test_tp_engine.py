@@ -18,6 +18,7 @@ ulp-level partial sums.
 import dataclasses
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -202,3 +203,52 @@ def test_tp2_spec_decode_token_exact(depth):
     assert e2.stats.spec_accepted_tokens == e1.stats.spec_accepted_tokens
     bound = (len(SIZES) + 1) * len(e2.kv_buckets)
     assert e2._packed_step._cache_size() <= bound
+
+
+def _run_int8(cfg, params, tp, kv_dtype):
+    eng = ServeEngine(cfg, params, max_slots=2, max_len=48,
+                      discrete_sizes=SIZES, avg_decode_len=4, tp=tp,
+                      kv_dtype=kv_dtype)
+    rng = np.random.default_rng(1)
+    for i, n in enumerate([3, 11, 5, 9, 4]):
+        eng.submit(Request(
+            rid=i, prompt=list(map(int, rng.integers(0, cfg.vocab_size,
+                                                     size=n))),
+            max_new_tokens=4))
+    done = eng.run()
+    assert len(done) == 5
+    return eng, {r.rid: tuple(r.output) for r in done}
+
+
+@needs_devices
+@pytest.mark.parametrize("arch", ["tiny-toy", "deepseek-v2-236b"])
+def test_tp2_int8_kv_token_exact(arch):
+    """int8 KV (DESIGN.md §15) composes with TP: GQA scale leaves shard on
+    the kv-head axis next to their values (MLA latent scales replicate), so
+    tp=2 quantized serving is f32 token-exact vs tp=1 quantized serving."""
+    cfg = _cfg(arch)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    e1, out1 = _run_int8(cfg, params, 1, "int8")
+    e2, out2 = _run_int8(cfg, params, 2, "int8")
+    assert out1 == out2, (cfg.name, out1, out2)
+    assert e2.stats.dispatches_per_iter == 1.0
+    assert e2.stats.syncs_per_iter == 1.0
+    assert e2.stats.kv_quant_bytes_saved > 0
+    # quantization adds no retrace keys: the tp=2 compile cache is exactly
+    # the native engine's on the same workload
+    e2_bf, out2_bf = _run_int8(cfg, params, 2, "bf16")
+    assert out2_bf == out2, cfg.name
+    assert e2._packed_step._cache_size() == \
+        e2_bf._packed_step._cache_size()
+    if cfg.mla is None:
+        # GQA: int8 value leaf AND its f32 scale leaf shard across devices
+        sub = e2.cache[0]["sub0"]
+        assert sub["k"].dtype == jnp.int8
+        assert not sub["k"].sharding.is_fully_replicated
+        assert not sub["k_s"].sharding.is_fully_replicated
+    else:
+        # absorbed MLA: latent cache + scales replicate (head-dim sharding
+        # happens in the absorbed projections, not the cache)
+        sub = e2.cache[0]["sub0"]
+        assert sub["c_kv"].dtype == jnp.int8
+        assert sub["c_kv_s"].sharding.is_fully_replicated
